@@ -1,0 +1,54 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (us_per_call is
+the simulated inference latency in microseconds; ``derived`` carries the
+figure's headline metric) plus a human-readable table.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict
+
+from repro.core.resources import AcceleratorConfig
+from repro.models.paper_nets import PAPER_NETS, build_net, synth_layer_codes
+from repro.sim.aras import ArasSimConfig, SimResult, simulate_aras, upper_bound_cycles
+from repro.sim.tpu import TpuResult, simulate_tpu
+
+VARIANTS = ("baseline", "B", "BR", "BRW")
+MAX_SAMPLES = 200_000  # per-layer code samples (histograms converge well before)
+
+
+@functools.lru_cache(maxsize=None)
+def net_and_codes(name: str):
+    graph = build_net(name)
+    codes = tuple(synth_layer_codes(graph, seed=0, max_samples=MAX_SAMPLES))
+    return graph, codes
+
+
+@functools.lru_cache(maxsize=None)
+def run_variant(name: str, variant: str) -> SimResult:
+    graph, codes = net_and_codes(name)
+    return simulate_aras(graph, list(codes), ArasSimConfig.variant(variant))
+
+
+@functools.lru_cache(maxsize=None)
+def run_tpu(name: str) -> TpuResult:
+    graph, _ = net_and_codes(name)
+    return simulate_tpu(graph)
+
+
+@functools.lru_cache(maxsize=None)
+def run_upper_bound_s(name: str) -> float:
+    graph, _ = net_and_codes(name)
+    return upper_bound_cycles(graph, AcceleratorConfig()) / AcceleratorConfig().freq_hz
+
+
+def csv_row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6

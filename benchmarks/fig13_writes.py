@@ -1,0 +1,27 @@
+"""Fig 13: normalized ReRAM writing activity (total programming pulses) of
+ARAS_BRW vs the unoptimized baseline.  Paper: −17% on average."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PAPER_NETS, csv_row, run_variant
+
+
+def main() -> dict:
+    ratios = {}
+    print("\n== Fig 13: normalized ReRAM writing activity (pulses) ==")
+    for net in PAPER_NETS:
+        base = run_variant(net, "baseline")
+        brw = run_variant(net, "BRW")
+        ratio = brw.total_pulses / base.total_pulses
+        ratios[net] = ratio
+        csv_row(f"fig13/{net}", brw.makespan_s * 1e6,
+                f"pulse_ratio={ratio:.3f};center={brw.reuse_center}")
+    avg = float(np.mean(list(ratios.values())))
+    csv_row("fig13/average", 0.0, f"pulse_ratio={avg:.3f};paper=0.83")
+    print(f"-- average pulse ratio {avg:.3f} (paper: 0.83 → −17%)")
+    return ratios
+
+
+if __name__ == "__main__":
+    main()

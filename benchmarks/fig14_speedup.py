@@ -1,0 +1,37 @@
+"""Fig 14: speedup of ARAS_BRW over the unoptimized baseline, plus the
+upper-bound fractions of §VII-B.  Paper: 1.5× average (up to 2.2× ResNet-50,
+~1.0× for BERT); baseline at 66% / ARAS at 88% of the write-once bound."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PAPER_NETS, csv_row, run_upper_bound_s, run_variant
+
+
+def main() -> dict:
+    out = {}
+    print("\n== Fig 14: ARAS_BRW speedup over baseline ==")
+    fracs_base, fracs_brw = [], []
+    for net in PAPER_NETS:
+        base = run_variant(net, "baseline")
+        brw = run_variant(net, "BRW")
+        ub = run_upper_bound_s(net)
+        speedup = base.makespan_s / brw.makespan_s
+        out[net] = speedup
+        fracs_base.append(ub / base.makespan_s)
+        fracs_brw.append(ub / brw.makespan_s)
+        csv_row(f"fig14/{net}", brw.makespan_s * 1e6,
+                f"speedup={speedup:.2f};inf_s={1/brw.makespan_s:.0f};"
+                f"ub_frac={fracs_brw[-1]:.2f}")
+    avg = float(np.mean(list(out.values())))
+    csv_row("fig14/average", 0.0,
+            f"speedup={avg:.2f};paper=1.5;ub_base={np.mean(fracs_base):.2f}"
+            f";ub_brw={np.mean(fracs_brw):.2f};paper_ub=0.66/0.88")
+    print(f"-- average speedup {avg:.2f} (paper: 1.5×); bound fractions "
+          f"baseline {np.mean(fracs_base):.2f} / ARAS {np.mean(fracs_brw):.2f} "
+          f"(paper: 0.66 / 0.88)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

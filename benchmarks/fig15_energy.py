@@ -1,0 +1,37 @@
+"""Fig 15: normalized energy breakdown of each ARAS configuration.
+Paper: bank selection −3%, +replication −14%, +weight reuse −11%; ARAS_BRW
+achieves 28% total savings; compute energy negligible; write energy dominates
+NLP, static energy high in CNNs."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PAPER_NETS, VARIANTS, csv_row, run_variant
+
+
+def main() -> dict:
+    out = {}
+    print("\n== Fig 15: normalized energy breakdown ==")
+    for net in PAPER_NETS:
+        base = run_variant(net, "baseline").total_energy_j
+        parts = {}
+        for v in VARIANTS:
+            r = run_variant(net, v)
+            parts[v] = r.total_energy_j / base
+            brk = ";".join(
+                f"{k}={val / base:.3f}" for k, val in r.energy.items() if k != "total"
+            )
+            csv_row(f"fig15/{net}/{v}", r.makespan_s * 1e6,
+                    f"norm_total={parts[v]:.3f};{brk}")
+        out[net] = parts
+    avg = {v: float(np.mean([out[n][v] for n in out])) for v in VARIANTS}
+    csv_row("fig15/average", 0.0,
+            ";".join(f"{v}={avg[v]:.3f}" for v in VARIANTS) + ";paper_BRW=0.72")
+    print(f"-- average normalized energy: "
+          + ", ".join(f"{v}={avg[v]:.3f}" for v in VARIANTS)
+          + "  (paper: BRW=0.72)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

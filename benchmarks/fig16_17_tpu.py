@@ -1,0 +1,32 @@
+"""Fig 16/17: ARAS_BRW vs an area/frequency-matched TPU-like accelerator.
+Paper: 1.2× average speedup (up to 1.5×) and 33% average energy reduction
+(up to 61%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PAPER_NETS, csv_row, run_tpu, run_variant
+
+
+def main() -> dict:
+    out = {}
+    print("\n== Fig 16/17: ARAS vs TPU-like accelerator ==")
+    for net in PAPER_NETS:
+        brw = run_variant(net, "BRW")
+        tpu = run_tpu(net)
+        speedup = tpu.makespan_s / brw.makespan_s
+        eratio = brw.total_energy_j / tpu.total_energy_j
+        out[net] = (speedup, eratio)
+        csv_row(f"fig16_17/{net}", brw.makespan_s * 1e6,
+                f"speedup_vs_tpu={speedup:.2f};energy_ratio={eratio:.2f}")
+    s = float(np.mean([v[0] for v in out.values()]))
+    e = float(np.mean([v[1] for v in out.values()]))
+    csv_row("fig16_17/average", 0.0,
+            f"speedup_vs_tpu={s:.2f};energy_ratio={e:.2f};paper=1.2/0.67")
+    print(f"-- average: speedup {s:.2f}× (paper 1.2×), "
+          f"energy ratio {e:.2f} (paper 0.67)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run as:
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --fast     # paper figures only
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    from benchmarks import (
+        fig13_writes,
+        fig14_speedup,
+        fig15_energy,
+        fig16_17_tpu,
+        tab3_accuracy,
+        tab4_endurance,
+    )
+
+    print("name,us_per_call,derived")
+    fig13_writes.main()
+    fig14_speedup.main()
+    fig15_energy.main()
+    fig16_17_tpu.main()
+    tab3_accuracy.main()
+    tab4_endurance.main()
+
+    if "--fast" not in sys.argv:
+        from benchmarks import streaming_bench
+
+        streaming_bench.main()
+
+    print(f"\ntotal benchmark wall time: {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

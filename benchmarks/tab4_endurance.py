@@ -1,0 +1,39 @@
+"""Table IV: ARAS lifespan in years.
+
+Real-time rates: 30 inf/s (CNNs), 100 inf/s (BERT) at 1e11 endurance;
+max-throughput at 1e12 endurance.  Lifespan = endurance / (cell rewrites per
+inference × inferences/s).  Cell rewrites per inference = weights written
+(incl. replication) / pool weight capacity."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PAPER_NETS, csv_row, run_variant
+
+SECONDS_PER_YEAR = 3600 * 24 * 365
+
+
+def main() -> dict:
+    out = {}
+    print("\n== Table IV: lifespan (years) ==")
+    for net in PAPER_NETS:
+        brw = run_variant(net, "BRW")
+        rt_rate = 100.0 if "bert" in net else 30.0
+        writes_per_inf = brw.cell_writes_per_inference
+        rt_years = 1e11 / (writes_per_inf * rt_rate) / SECONDS_PER_YEAR
+        max_rate = 1.0 / brw.makespan_s
+        max_years = 1e12 / (writes_per_inf * max_rate) / SECONDS_PER_YEAR
+        out[net] = (rt_years, max_years)
+        csv_row(f"tab4/{net}", brw.makespan_s * 1e6,
+                f"rt_years={rt_years:.0f};max_tp_years={max_years:.0f}")
+    rt = float(np.mean([v[0] for v in out.values()]))
+    mx = float(np.mean([v[1] for v in out.values()]))
+    csv_row("tab4/average", 0.0,
+            f"rt_years={rt:.0f};max_tp_years={mx:.0f};paper=12/40")
+    print(f"-- average lifespan: real-time {rt:.0f} y (paper 12), "
+          f"max-throughput {mx:.0f} y (paper 40)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

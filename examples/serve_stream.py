@@ -1,0 +1,43 @@
+"""Example: serve a model whose weights exceed the device weight arena,
+streaming layers ARAS-style (delta-encoded INT8 installs overlapped with
+compute), and compare against the resident full model.
+
+    PYTHONPATH=src python examples/serve_stream.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.nn.model import forward, init_params
+from repro.streaming.executor import StreamingExecutor
+
+
+def main() -> None:
+    cfg = get_config("gemma-7b", smoke=True)
+    cfg = dataclasses.replace(cfg, n_layers=6, scan_layers=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.ones((2, 24), jnp.int32)}
+
+    # 6 layers, 3 arena slots → every slot is overwritten twice per pass.
+    ex = StreamingExecutor(params, cfg, arena_slots=3, reuse=True,
+                           plan_tokens=2 * 24)
+    logits, m = ex.forward(batch)
+    ref, _, _ = forward(params, batch, cfg)
+    err = float(jnp.max(jnp.abs(logits.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    print(f"streamed forward matches resident model to {err:.4f} (INT8 noise)")
+    print(f"installs: {int(m['raw_bytes'])} raw bytes -> "
+          f"{int(m['wire_bytes'])} wire bytes "
+          f"(skip ratio {m['mean_skip']:.1%}, center={int(m['reuse_center'])})")
+    print(f"plan: overlap speedup {m['plan_overlap_speedup']:.2f}× vs naive, "
+          f"projected makespan {m['plan_makespan_s']*1e3:.2f} ms on TPU link")
+
+
+if __name__ == "__main__":
+    main()

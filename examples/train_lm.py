@@ -1,0 +1,19 @@
+"""Example: train a reduced LM (any of the 10 assigned architectures) for a
+few hundred steps on CPU with checkpoint/resume.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-32b --steps 50
+
+This drives the same launcher used for the production meshes; on a pod you
+would add  --mesh pod  (or --mesh multipod) under a real TPU runtime.
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "qwen3-32b"]
+    cmd = [sys.executable, "-m", "repro.launch.train", "--smoke",
+           "--steps", "50", "--batch", "4", "--seq", "64",
+           "--ckpt-dir", "/tmp/repro_train_ck", "--ckpt-every", "20", *args]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd, env={"PYTHONPATH": "src",
+                                               "PATH": "/usr/bin:/bin"}))

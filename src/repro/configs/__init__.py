@@ -1,0 +1,57 @@
+"""Architecture registry: the 10 assigned architectures (+ paper nets).
+
+Each module exposes ``full()`` (the exact published config) and ``smoke()``
+(a reduced same-family config for CPU tests).  Select with ``--arch <id>``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.nn.config import ModelConfig
+
+from repro.configs import (
+    qwen3_moe_235b_a22b,
+    deepseek_v2_lite_16b,
+    hubert_xlarge,
+    hymba_1_5b,
+    paligemma_3b,
+    minicpm_2b,
+    qwen3_32b,
+    yi_34b,
+    gemma_7b,
+    xlstm_350m,
+)
+
+_MODULES = {
+    "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "hubert-xlarge": hubert_xlarge,
+    "hymba-1.5b": hymba_1_5b,
+    "paligemma-3b": paligemma_3b,
+    "minicpm-2b": minicpm_2b,
+    "qwen3-32b": qwen3_32b,
+    "yi-34b": yi_34b,
+    "gemma-7b": gemma_7b,
+    "xlstm-350m": xlstm_350m,
+}
+
+ARCHS: Tuple[str, ...] = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod = _MODULES[name]
+    return mod.smoke() if smoke else mod.full()
+
+
+#: Shapes each arch supports (see DESIGN.md §5).  long_500k needs
+#: sub-quadratic attention; encoder-only archs have no decode step.
+def supported_shapes(name: str) -> Tuple[str, ...]:
+    cfg = get_config(name)
+    shapes = ["train_4k", "prefill_32k"]
+    if not cfg.is_encoder:
+        shapes.append("decode_32k")
+        sub_quadratic = cfg.family in ("ssm",) or (
+            cfg.sliding_window > 0 or cfg.hybrid_parallel)
+        if sub_quadratic:
+            shapes.append("long_500k")
+    return tuple(shapes)

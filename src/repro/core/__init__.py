@@ -1,0 +1,34 @@
+"""ARAS core: the paper's primary contribution.
+
+- `layer_graph`     — DNN layer IR (Fig 6's Data Flow Graph)
+- `resources`       — PE/APU/crossbar pool accounting (Table II)
+- `scheduler`       — offline scheduler producing the static instruction
+                      stream (Fig 6/8/9); decisions reused by the TPU-native
+                      streaming executor in `repro.streaming`
+- `replication`     — Adaptive Weight Replication, Algorithm 1 (§V-B)
+- `bank_selection`  — Adaptive Bank Selection ILP (§V-A)
+- `weight_reuse`    — Adaptive Partial Weight Reuse (§V-C)
+"""
+from repro.core.layer_graph import LayerGraph, LayerNode, conv, fc
+from repro.core.resources import AcceleratorConfig, RowPool
+from repro.core.scheduler import Schedule, build_schedule, validate_schedule
+from repro.core.replication import LayerCost, WriteItem, plan_writes
+from repro.core.bank_selection import Bank, BankSelection, make_banks, select_banks
+from repro.core.weight_reuse import (
+    CENTERS,
+    LayerEncoding,
+    encode_network,
+    cell_hist,
+    expected_pulses_per_weight,
+    expected_skip_per_cell,
+)
+
+__all__ = [
+    "LayerGraph", "LayerNode", "conv", "fc",
+    "AcceleratorConfig", "RowPool",
+    "Schedule", "build_schedule", "validate_schedule",
+    "LayerCost", "WriteItem", "plan_writes",
+    "Bank", "BankSelection", "make_banks", "select_banks",
+    "CENTERS", "LayerEncoding", "encode_network", "cell_hist",
+    "expected_pulses_per_weight", "expected_skip_per_cell",
+]

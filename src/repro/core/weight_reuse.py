@@ -1,0 +1,149 @@
+"""Adaptive Partial Weight Reuse (paper §V-C).
+
+Re-encode each layer's INT8 weight codes by shifting the layer mean to a
+common *Center* so that consecutive layers overwriting the same ReRAM cells
+agree on the most-significant 2-bit cells.  Equal cells are skipped; smaller
+deltas take fewer programming pulses.  The shift is exactly compensated in
+the zero point at de-quantization (see `repro.xbar.quant`), so it is free.
+
+Distribution-level machinery: the simulator needs, per ordered layer pair
+(old occupant → new occupant), the expected pulses/weight and skip ratios.
+Pairing of individual weights inside a crossbar is effectively random across
+layers, so the exact expectation follows from the per-cell level histograms
+(the paper's P_i(k) of Eq. 3) — no elementwise pass over 100M-weight tensors
+is needed inside the event loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.xbar.cells import CELLS_PER_WEIGHT, LEVELS
+
+# The six viable centers of §V-C (mid-points of MSB-cell sections away from
+# the clipping extremes).
+CENTERS: Tuple[int, ...] = (88, 104, 96, 160, 152, 168)
+
+# |a - b| matrix over the 4 levels of a 2-bit cell.
+_ABS_DELTA = np.abs(np.arange(LEVELS)[:, None] - np.arange(LEVELS)[None, :]).astype(np.float64)
+_EQ = np.eye(LEVELS, dtype=np.float64)
+
+
+def cell_hist(codes: np.ndarray) -> np.ndarray:
+    """Per-cell level histograms, shape (CELLS_PER_WEIGHT, LEVELS)."""
+    c = codes.astype(np.int64).reshape(-1)
+    hists = np.empty((CELLS_PER_WEIGHT, LEVELS), dtype=np.float64)
+    for i in range(CELLS_PER_WEIGHT):
+        levels = (c >> (2 * i)) & (LEVELS - 1)
+        hists[i] = np.bincount(levels, minlength=LEVELS) / max(c.size, 1)
+    return hists
+
+
+#: Histogram of pristine (erased) cells — all at level 0.
+ERASED_HIST: np.ndarray = np.tile(
+    np.eye(LEVELS, dtype=np.float64)[0], (CELLS_PER_WEIGHT, 1)
+)
+
+
+def expected_pulses_per_weight(hist_old: np.ndarray, hist_new: np.ndarray) -> float:
+    """E[Σ_cells |Δ level|] when hist_new overwrites hist_old (random pairing)."""
+    total = 0.0
+    for i in range(CELLS_PER_WEIGHT):
+        total += float(hist_old[i] @ _ABS_DELTA @ hist_new[i])
+    return total
+
+
+def expected_skip_per_cell(hist_old: np.ndarray, hist_new: np.ndarray) -> np.ndarray:
+    """Paper Eq. 3 per cell: Σ_k P_old(k)·P_new(k), shape (4,)."""
+    return np.array(
+        [float(hist_old[i] @ _EQ @ hist_new[i]) for i in range(CELLS_PER_WEIGHT)]
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerEncoding:
+    """Re-encoding decision for one layer."""
+
+    name: str
+    offset: int                # code-domain shift (0 for first layer / reuse off)
+    clip_rate: float           # fraction of codes clipped by the shift
+    hist: np.ndarray           # (4, 4) per-cell level histograms after shift
+
+
+def _shift_codes(codes: np.ndarray, offset: int) -> Tuple[np.ndarray, float]:
+    shifted = codes.astype(np.int64) + offset
+    clipped = np.count_nonzero((shifted < 0) | (shifted > 255)) / max(codes.size, 1)
+    return np.clip(shifted, 0, 255).astype(np.uint8), clipped
+
+
+def encode_network(
+    layer_codes: Sequence[Tuple[str, np.ndarray]],
+    enabled: bool = True,
+    max_clip_rate: float = 1e-3,
+    centers: Sequence[int] = CENTERS,
+    shift_first_layer: bool = False,
+) -> Tuple[List[LayerEncoding], Optional[int]]:
+    """Pick the best common Center for a network and re-encode every layer.
+
+    Follows §V-C: evaluates every candidate center, discards centers whose
+    worst-layer clip rate exceeds ``max_clip_rate`` (the accuracy guard), and
+    keeps the one maximizing the average expected MSB-cell skip ratio between
+    consecutive layers.  The first layer is never shifted (paper: first-layer
+    perturbations are disproportionately harmful).
+
+    Returns (encodings, chosen_center).  ``chosen_center`` is None when reuse
+    is disabled or no center passes the clip guard.
+    """
+    names = [n for n, _ in layer_codes]
+    raw = [c for _, c in layer_codes]
+    if not enabled or len(raw) == 0:
+        encs = [
+            LayerEncoding(n, 0, 0.0, cell_hist(c)) for n, c in zip(names, raw)
+        ]
+        return encs, None
+
+    best_center, best_score, best_encs = None, -np.inf, None
+    for center in centers:
+        encs: List[LayerEncoding] = []
+        worst_clip = 0.0
+        for li, codes in enumerate(raw):
+            if li == 0 and not shift_first_layer:
+                shifted, clip, off = codes, 0.0, 0
+            else:
+                off = int(round(center - float(np.mean(codes.astype(np.float64)))))
+                shifted, clip = _shift_codes(codes, off)
+            worst_clip = max(worst_clip, clip)
+            encs.append(LayerEncoding(names[li], off, clip, cell_hist(shifted)))
+        if worst_clip > max_clip_rate:
+            continue
+        # Score: mean MSB-cell (cells 2, 3) skip ratio over consecutive pairs.
+        if len(encs) > 1:
+            score = float(
+                np.mean(
+                    [
+                        expected_skip_per_cell(a.hist, b.hist)[2:].sum()
+                        for a, b in zip(encs[:-1], encs[1:])
+                    ]
+                )
+            )
+        else:
+            score = 0.0
+        if score > best_score:
+            best_center, best_score, best_encs = center, score, encs
+
+    if best_encs is None:  # no center met the accuracy guard → reuse disabled
+        encs = [LayerEncoding(n, 0, 0.0, cell_hist(c)) for n, c in zip(names, raw)]
+        return encs, None
+    return best_encs, best_center
+
+
+def pulse_matrix(encodings: Sequence[LayerEncoding]) -> np.ndarray:
+    """(L+1, L) expected pulses/weight; row 0 is the erased state."""
+    hists = [ERASED_HIST] + [e.hist for e in encodings]
+    out = np.zeros((len(hists), len(encodings)))
+    for i, ho in enumerate(hists):
+        for j, e in enumerate(encodings):
+            out[i, j] = expected_pulses_per_weight(ho, e.hist)
+    return out

@@ -1,0 +1,4 @@
+from repro.ft.straggler import StepTimer, StragglerReport
+from repro.ft.watchdog import Watchdog
+
+__all__ = ["StepTimer", "StragglerReport", "Watchdog"]

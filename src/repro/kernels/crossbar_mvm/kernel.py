@@ -1,0 +1,71 @@
+"""Pallas kernel: the crossbar dot-product, TPU-native.
+
+The paper's APU computes ``y = (x_q - zp_x)·(w_q - zp_w)·s_x·s_w`` in the
+analog domain with bit-serial activations.  The MXU equivalent is an INT8
+matmul with int32 accumulation plus the closed-form zero-point corrections
+(Eq. 7) — including the §V-C install Offset, which is folded into ``zp_w``
+and therefore costs *nothing* here.
+
+Tiling: grid over (M/bm, N/bn) output tiles with the full K dimension per
+tile (our K ≤ 8192 → ≤ 2 MB of VMEM per operand at bm = bn = 128, well
+under the ~16 MB VMEM budget and MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, zpx_ref, zpw_ref, scale_ref, out_ref):
+    x = x_ref[...].astype(jnp.int32)           # (bm, K) uint8 codes
+    w = w_ref[...].astype(jnp.int32)           # (K, bn)
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    k = x.shape[1]
+    zpx = zpx_ref[0]
+    zpw = zpw_ref[0]
+    sum_x = jnp.sum(x, axis=1, keepdims=True).astype(jnp.float32)
+    sum_w = jnp.sum(w, axis=0, keepdims=True).astype(jnp.float32)
+    out = (acc.astype(jnp.float32)
+           - zpw * sum_x - zpx * sum_w + k * zpx * zpw) * scale_ref[0]
+    out_ref[...] = out
+
+
+def crossbar_mvm_pallas(
+    x_codes: jax.Array,     # (M, K) uint8
+    w_codes: jax.Array,     # (K, N) uint8
+    zp_x: jax.Array,        # scalar f32
+    zp_w: jax.Array,        # scalar f32
+    scale: jax.Array,       # scalar f32 = s_x * s_w
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = x_codes.shape
+    K2, N = w_codes.shape
+    assert K == K2
+    pm, pn = (-M) % bm, (-N) % bn
+    xp = jnp.pad(x_codes, ((0, pm), (0, 0)))
+    wp = jnp.pad(w_codes, ((0, 0), (0, pn)))
+    grid = ((M + pm) // bm, (N + pn) // bn)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M + pm, N + pn), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, jnp.atleast_1d(zp_x.astype(jnp.float32)),
+      jnp.atleast_1d(zp_w.astype(jnp.float32)),
+      jnp.atleast_1d(scale.astype(jnp.float32)))
+    return out[:M, :N]

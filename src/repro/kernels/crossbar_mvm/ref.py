@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: identical math via repro.xbar.quant.dot_int8."""
+import jax
+import jax.numpy as jnp
+
+from repro.xbar.quant import QuantParams, dot_int8
+
+
+def crossbar_mvm_ref(x_codes, w_codes, zp_x, zp_w, scale) -> jax.Array:
+    # scale = s_x * s_w; dot_int8 takes them separately — split arbitrarily.
+    xq = QuantParams(scale=jnp.asarray(scale, jnp.float32),
+                     zero_point=jnp.asarray(zp_x, jnp.float32))
+    wq = QuantParams(scale=jnp.asarray(1.0, jnp.float32),
+                     zero_point=jnp.asarray(zp_w, jnp.float32))
+    return dot_int8(x_codes, w_codes, xq, wq)

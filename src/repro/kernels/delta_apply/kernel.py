@@ -1,0 +1,38 @@
+"""Pallas kernel: in-place modular delta application to resident INT8 codes.
+
+``new = (old + delta) mod 256`` — the device half of an ARAS weight install
+(the ReRAM "pulse train" analogue).  Streaming-friendly: pure elementwise,
+one VMEM tile per grid step, unrolled over a flat code vector.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 64 * 1024
+
+
+def _kernel(old_ref, delta_ref, out_ref):
+    # uint8 addition wraps modulo 256 by construction.
+    out_ref[...] = old_ref[...] + delta_ref[...]
+
+
+def delta_apply_pallas(old: jax.Array, delta: jax.Array,
+                       interpret: bool = False) -> jax.Array:
+    assert old.shape == delta.shape and old.dtype == jnp.uint8
+    n = old.size
+    pad = (-n) % BLOCK
+    o = jnp.pad(old.reshape(-1), (0, pad))
+    d = jnp.pad(delta.reshape(-1), (0, pad))
+    grid = (o.size // BLOCK,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,)),
+                  pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(o.shape, jnp.uint8),
+        interpret=interpret,
+    )(o, d)
+    return out[:n].reshape(old.shape)

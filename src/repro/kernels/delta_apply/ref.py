@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for delta_apply."""
+import jax
+import jax.numpy as jnp
+
+
+def delta_apply_ref(old: jax.Array, delta: jax.Array) -> jax.Array:
+    return (old.astype(jnp.int32) + delta.astype(jnp.int32)).astype(jnp.uint8)

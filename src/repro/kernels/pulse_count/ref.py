@@ -1,0 +1,9 @@
+"""Pure-jnp oracle via repro.xbar.cells."""
+import jax.numpy as jnp
+
+from repro.xbar.cells import cell_deltas
+
+
+def pulse_count_ref(old, new):
+    d = cell_deltas(old, new)
+    return jnp.sum(jnp.abs(d)), jnp.sum((d == 0).astype(jnp.int32))

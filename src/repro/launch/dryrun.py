@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on placeholder devices; record memory analysis, cost analysis and
+collective traffic for the roofline report.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell, subprocess each
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first initialization.
+
+Roofline methodology note (see EXPERIMENTS.md §Roofline): XLA's
+HloCostAnalysis counts a `while` body once, so a scanned-over-layers program
+under-reports FLOPs/bytes/collectives by ~n_layers.  Each cell therefore
+compiles (a) the REAL scanned program — compile-success proof + honest
+memory_analysis — and (b) two small "cost probes" at reduced depth with
+every chunk loop unrolled, from which per-layer slopes are fitted and
+extrapolated to full depth (exact for depth-linear programs, which these
+stacks are).
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, supported_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, ShapeSpec
+from repro.launch.steps import (
+    abstract_caches,
+    abstract_opt_state,
+    abstract_params,
+    batch_shardings,
+    cache_shardings,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    opt_shardings,
+    param_shardings,
+)
+from repro.parallel.sharding import make_spec, use_mesh
+from repro.roofline.analysis import HW, collective_bytes_from_hlo, roofline_terms
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _model_flops(cfg, spec: ShapeSpec) -> float:
+    n_active = cfg.active_param_count()
+    if spec.kind == "train":
+        return 6.0 * n_active * spec.seq_len * spec.global_batch
+    if spec.kind == "prefill":
+        return 2.0 * n_active * spec.seq_len * spec.global_batch
+    return 2.0 * n_active * spec.global_batch  # decode: one token per seq
+
+
+def _build_lowered(cfg, spec: ShapeSpec, mesh):
+    """Lower the cell's step function under explicit shardings."""
+    from repro.data.pipeline import DataConfig, make_batch_specs
+    import jax.numpy as jnp
+
+    psh = param_shardings(cfg, mesh)
+    aparams = abstract_params(cfg)
+    rep = NamedSharding(mesh, P())
+    ba = make_spec("batch")[0]
+
+    if spec.kind == "train":
+        aopt = abstract_opt_state(aparams)
+        osh = opt_shardings(psh, mesh)
+        bsh = batch_shardings(cfg, mesh)
+        abatch = make_batch_specs(cfg, DataConfig(spec.seq_len, spec.global_batch))
+        fn = make_train_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(psh, osh, bsh, rep),
+                         out_shardings=(psh, osh, None),
+                         donate_argnums=(0, 1))
+        return jitted.lower(aparams, aopt, abatch,
+                            jax.ShapeDtypeStruct((), jnp.int32))
+    if spec.kind == "prefill":
+        bsh = batch_shardings(cfg, mesh)
+        abatch = make_batch_specs(cfg, DataConfig(spec.seq_len, spec.global_batch))
+        fn = make_prefill_step(cfg, cache_len=spec.seq_len + cfg.prefix_len)
+        jitted = jax.jit(fn, in_shardings=(psh, bsh))
+        return jitted.lower(aparams, abatch)
+    from repro.launch.steps import batch_axis_for
+    acaches = abstract_caches(cfg, spec.global_batch, spec.seq_len)
+    csh = cache_shardings(cfg, mesh, spec.global_batch)
+    ba_eff = batch_axis_for(mesh, spec.global_batch)
+    atoken = jax.ShapeDtypeStruct((spec.global_batch,), jnp.int32)
+    apos = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = make_serve_step(cfg)
+    jitted = jax.jit(fn, in_shardings=(psh, NamedSharding(mesh, P(ba_eff)),
+                                       csh, rep),
+                     donate_argnums=(2,))
+    return jitted.lower(aparams, atoken, acaches, apos)
+
+
+def _cost_of(cfg, spec, mesh, chips):
+    lowered = _build_lowered(cfg, spec, mesh)
+    compiled = lowered.compile()
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+    except Exception:
+        cost = {}
+    coll = collective_bytes_from_hlo(compiled.as_text(), default_group=chips)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll["total"], coll)
+
+
+def _probe_cfg(cfg, depth: int):
+    g = tuple(i for i in cfg.global_layers if i < depth) or (
+        (0,) if cfg.global_layers else ())
+    return dataclasses.replace(
+        cfg, n_layers=depth, scan_layers=False, unroll_chunks=True,
+        global_layers=g, attn_q_chunk=2048, attn_kv_chunk=2048)
+
+
+def probe_extrapolated_cost(cfg, spec, mesh, chips):
+    """Two reduced-depth probes -> per-layer slope -> full-depth estimate."""
+    if cfg.family == "ssm" and cfg.slstm_every:
+        depths = (cfg.slstm_every, 2 * cfg.slstm_every)
+    elif cfg.n_experts and cfg.first_dense_layers:
+        f = cfg.first_dense_layers
+        depths = (f + 1, f + 2)
+    else:
+        depths = (1, 2)
+    depths = tuple(min(d, cfg.n_layers) for d in depths)
+    if depths[0] == depths[1]:
+        c = _probe_cfg(cfg, depths[0])
+        f1, b1, l1, coll = _cost_of(c, spec, mesh, chips)
+        return {"flops": f1, "bytes": b1, "coll": l1,
+                "probe_depths": depths, "collectives": coll}
+
+    c1 = _probe_cfg(cfg, depths[0])
+    c2 = _probe_cfg(cfg, depths[1])
+    f1, b1, l1, _ = _cost_of(c1, spec, mesh, chips)
+    f2, b2, l2, coll2 = _cost_of(c2, spec, mesh, chips)
+    dd = depths[1] - depths[0]
+
+    def fit(v1, v2):
+        slope = (v2 - v1) / dd
+        fixed = v1 - slope * depths[0]
+        return fixed + slope * cfg.n_layers
+
+    extra = {}
+    if cfg.global_layers and len(cfg.global_layers) > 1:
+        # hymba: slope above reflects SWA layers; measure the global-layer
+        # premium once and add it for the remaining global layers.
+        cg = dataclasses.replace(c1, global_layers=tuple(range(min(2, depths[0]))))
+        fg, bg, lg, _ = _cost_of(cg, spec, mesh, chips)
+        n_extra = len(cfg.global_layers) - 1
+        extra = {"flops": (fg - f1) * n_extra, "bytes": (bg - b1) * n_extra,
+                 "coll": (lg - l1) * n_extra}
+    return {
+        "flops": fit(f1, f2) + extra.get("flops", 0.0),
+        "bytes": fit(b1, b2) + extra.get("bytes", 0.0),
+        "coll": fit(l1, l2) + extra.get("coll", 0.0),
+        "probe_depths": depths,
+        "collectives": coll2,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             smoke: bool = False, skip_probes: bool = False,
+             kv_int8: bool = False) -> dict:
+    cfg = get_config(arch, smoke=smoke)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    spec = SHAPES[shape_name]
+    if smoke:
+        spec = dataclasses.replace(spec, seq_len=min(spec.seq_len, 128),
+                                   global_batch=min(spec.global_batch, 16))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.size
+    t0 = time.time()
+
+    with use_mesh(mesh):
+        lowered = _build_lowered(cfg, spec, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        if mem is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                mem_d[f] = getattr(mem, f, None)
+        full_coll = collective_bytes_from_hlo(compiled.as_text(),
+                                              default_group=chips)
+        del compiled, lowered
+
+        # Cost probes (single-pod roofline only; multi-pod run proves sharding)
+        probe = None
+        if not multi_pod and not skip_probes:
+            probe = probe_extrapolated_cost(cfg, spec, mesh, chips)
+
+    report = None
+    if probe is not None:
+        report = roofline_terms(
+            arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+            cost_analysis={"flops": probe["flops"],
+                           "bytes accessed": probe["bytes"]},
+            hlo_text="",
+            model_flops_global=_model_flops(cfg, spec))
+        # collective term from the probe-extrapolated wire bytes
+        report.collective_bytes_per_device = probe["coll"]
+        report.collective_s = probe["coll"] / HW["link_bw"]
+        terms = {"compute": report.compute_s, "memory": report.memory_s,
+                 "collective": report.collective_s}
+        report.dominant = max(terms, key=terms.get)
+        report.collectives = probe["collectives"]
+
+    args_b = mem_d.get("argument_size_in_bytes") or 0
+    temp_b = mem_d.get("temp_size_in_bytes") or 0
+    out_b = mem_d.get("output_size_in_bytes") or 0
+    alias_b = mem_d.get("alias_size_in_bytes") or 0
+    per_device_bytes = args_b + temp_b + out_b - alias_b
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "smoke": smoke,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_d,
+        "per_device_bytes": per_device_bytes,
+        "per_device_gb": round(per_device_bytes / 1024**3, 3),
+        "fits_hbm": bool(per_device_bytes <= HW["hbm_bytes"]),
+        "collective_ops_full_hlo": {k: v for k, v in full_coll.items()
+                                    if k.startswith("n_")},
+        "probe": ({k: v for k, v in probe.items() if k != "collectives"}
+                  if probe else None),
+        "roofline": report.as_dict() if report else None,
+    }
+    return result
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCHS)
+    p.add_argument("--shape", choices=tuple(SHAPES))
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--skip-probes", action="store_true")
+    p.add_argument("--kv-int8", action="store_true",
+                   help="int8 KV cache (EXPERIMENTS.md §Perf iteration 9)")
+    p.add_argument("--out", default=None)
+    p.add_argument("--timeout", type=int, default=5400)
+    args = p.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch in ARCHS:
+            for shape in supported_shapes(arch):
+                for mp in (False, True):
+                    mesh_name = "pod2x16x16" if mp else "pod16x16"
+                    out = os.path.join(
+                        RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.json")
+                    if os.path.exists(out):
+                        print(f"skip (exists): {out}", flush=True)
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--out", out]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    if args.smoke:
+                        cmd.append("--smoke")
+                    print(f"=== {arch} × {shape} × {mesh_name}", flush=True)
+                    t0 = time.time()
+                    try:
+                        subprocess.run(cmd, check=True, timeout=args.timeout,
+                                       stdout=subprocess.DEVNULL)
+                        print(f"    ok in {time.time()-t0:.0f}s", flush=True)
+                    except Exception as e:  # noqa: BLE001
+                        failures.append((arch, shape, mesh_name, repr(e)))
+                        print(f"    FAILED after {time.time()-t0:.0f}s: {e}",
+                              flush=True)
+        print(f"\ndone; {len(failures)} failures")
+        for f in failures:
+            print("  FAIL:", *f)
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch/--shape required (or --all)"
+    try:
+        result = run_cell(args.arch, args.shape, args.multi_pod, args.smoke,
+                          args.skip_probes, args.kv_int8)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(2)
+    blob = json.dumps(result, indent=2, default=str)
+    print(blob)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh: (data=16, model=16) per pod; (pod=2, data=16, model=16)
+across pods.  A function (not a module-level constant) so importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} (see launch/dryrun.py)")
+    # More devices than the mesh needs (e.g. 512 forced, single-pod 256):
+    # build the mesh over the leading subset.
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many devices exist (tests)."""
+    devices = jax.devices()[: data * model]
+    return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))

@@ -1,0 +1,208 @@
+"""Jittable step functions and their sharding trees.
+
+Everything the dry-run lowers comes from here, so the launcher (train.py /
+serve.py) and the dry-run exercise the *same* code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.pipeline import DataConfig, make_batch_specs
+from repro.nn.config import ModelConfig
+from repro.nn.model import decode_step, init_cache, init_params, lm_loss, prefill, param_specs
+from repro.nn.transformer import layer_kind
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import cosine, wsd
+from repro.parallel.sharding import batch_axes, make_spec
+
+
+# ----------------------------------------------------------------- steps
+def make_train_step(cfg: ModelConfig, peak_lr: float = 3e-4,
+                    warmup: int = 2000, total: int = 100_000):
+    if cfg.name.startswith("minicpm"):
+        sched = functools.partial(wsd, peak_lr=peak_lr, warmup=warmup,
+                                  stable=int(total * 0.8),
+                                  decay=int(total * 0.1))
+    else:
+        sched = functools.partial(cosine, peak_lr=peak_lr, warmup=warmup,
+                                  total=total)
+
+    def train_step(params, opt_state: AdamWState, batch, step):
+        def loss_fn(p):
+            return lm_loss(p, batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = sched(step)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, lr)
+        out_metrics = {"loss": loss, "lr": lr, **metrics, **om}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, cache_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, caches, pos):
+        return decode_step(params, token, caches, pos, cfg)
+    return serve_step
+
+
+# ------------------------------------------------------------- shardings
+def _is_spec_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, (str, tuple)) for e in x)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    specs = param_specs(cfg)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, make_spec(*s)), specs,
+        is_leaf=_is_spec_leaf)
+
+
+def opt_shardings(param_sh, mesh: Mesh):
+    return AdamWState(step=NamedSharding(mesh, P()),
+                      mu=param_sh, nu=param_sh)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh):
+    ba = make_spec("batch")[0]
+    out: Dict[str, NamedSharding] = {}
+    d = DataConfig(seq_len=8, global_batch=8)  # structure only
+    for k in make_batch_specs(cfg, d):
+        if k in ("tokens", "targets", "loss_mask"):
+            out[k] = NamedSharding(mesh, P(ba, None))
+        else:  # embeds / patch_embeds: shard seq over model too
+            out[k] = NamedSharding(mesh, P(ba, "model", None))
+    return out
+
+
+def _cache_entry_spec(cfg: ModelConfig, window: int, mesh: Mesh):
+    ba = make_spec("batch")[0]
+    if cfg.attn_type == "mla":
+        return {"c_kv": NamedSharding(mesh, P(ba, "model", None)),
+                "k_rope": NamedSharding(mesh, P(ba, "model", None))}
+    out = {"k": NamedSharding(mesh, P(ba, "model", None, None)),
+           "v": NamedSharding(mesh, P(ba, "model", None, None))}
+    if cfg.kv_cache_dtype == "int8":
+        out["k_scale"] = NamedSharding(mesh, P(ba, "model", None))
+        out["v_scale"] = NamedSharding(mesh, P(ba, "model", None))
+    return out
+
+
+def batch_axis_for(mesh: Mesh, global_batch: int):
+    """The batch mesh axes, or None (replicate) when the batch is too small
+    to shard (e.g. long_500k's single sequence)."""
+    ba = make_spec("batch")[0]
+    if ba is None:
+        return None
+    axes = (ba,) if isinstance(ba, str) else tuple(ba)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return ba if global_batch % n == 0 else None
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, global_batch: int = 0):
+    """Mirrors nn.model.init_cache structure (segment plan)."""
+    from repro.nn.transformer import stack_plan
+    ba = make_spec("batch")[0]
+    if global_batch:
+        ba = batch_axis_for(mesh, global_batch)
+    rep = lambda *s: NamedSharding(mesh, P(*s))
+
+    def entry(window):
+        if cfg.attn_type == "mla":
+            return {"c_kv": rep(ba, "model", None),
+                    "k_rope": rep(ba, "model", None)}
+        out = {"k": rep(ba, "model", None, None),
+               "v": rep(ba, "model", None, None)}
+        if cfg.kv_cache_dtype == "int8":
+            out["k_scale"] = rep(ba, "model", None)
+            out["v_scale"] = rep(ba, "model", None)
+        return out
+
+    def layer_spec(i: int):
+        kind = layer_kind(cfg, i)
+        if kind == "mlstm":
+            return {"S": rep(ba, None, None, None), "n": rep(ba, None, None)}
+        if kind == "slstm":
+            return {"c": rep(ba, None, None), "n": rep(ba, None, None),
+                    "h": rep(ba, None, None)}
+        if kind == "hybrid":
+            return {
+                "attn": entry(cfg.window_for_layer(i)),
+                "mamba": {"conv": rep(ba, None, "model"),
+                          "h": rep(ba, "model", None)},
+            }
+        return {"attn": entry(cfg.window_for_layer(i))}
+
+    out = []
+    for start, length, scanned in stack_plan(cfg):
+        one = layer_spec(start)
+        if scanned:
+            one = jax.tree.map(
+                lambda sh: NamedSharding(mesh, P(None, *sh.spec)), one,
+                is_leaf=lambda x: hasattr(x, "spec"))
+        out.append(one)
+    return out
+
+
+# ------------------------------------------------------- abstract inputs
+def _bf16_floats(tree):
+    def cast(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+        return jax.ShapeDtypeStruct(l.shape, l.dtype)
+    return jax.tree.map(cast, tree)
+
+
+def abstract_params(cfg: ModelConfig):
+    shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return _bf16_floats(shapes)
+
+
+def abstract_opt_state(aparams):
+    return jax.eval_shape(adamw_init, aparams)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, cache_len))
+
+
+def input_specs(cfg: ModelConfig, shape_kind: str, seq_len: int,
+                global_batch: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    if shape_kind == "train":
+        data = DataConfig(seq_len=seq_len, global_batch=global_batch)
+        return {
+            "params": abstract_params(cfg),
+            "opt_state": None,  # filled by caller
+            "batch": make_batch_specs(cfg, data),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    if shape_kind == "prefill":
+        data = DataConfig(seq_len=seq_len, global_batch=global_batch)
+        return {
+            "params": abstract_params(cfg),
+            "batch": make_batch_specs(cfg, data),
+        }
+    # decode: one token, cache of seq_len
+    return {
+        "params": abstract_params(cfg),
+        "token": jax.ShapeDtypeStruct((global_batch,), jnp.int32),
+        "caches": abstract_caches(cfg, global_batch, seq_len),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

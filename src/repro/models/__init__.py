@@ -1,0 +1,4 @@
+"""Layer graphs for the paper's DNN set and the assigned LM architectures."""
+from repro.models.paper_nets import PAPER_NETS, build_net, synth_layer_codes
+
+__all__ = ["PAPER_NETS", "build_net", "synth_layer_codes"]

@@ -1,0 +1,502 @@
+"""Attention: GQA/MQA/MLA, sliding-window, prefix-LM and encoder masks.
+
+Three execution paths:
+  * plain      — full-score softmax, for short sequences and decode;
+  * chunked    — double-scan online-softmax ("flash" in XLA; the Pallas TPU
+                 kernel in `repro.kernels.flash_attention` implements the
+                 same contract), bounded memory at 32k+ sequence lengths;
+  * banded     — sliding-window attention via static-size dynamic slices:
+                 O(S·w) compute instead of O(S²) masking.
+
+All paths accumulate in fp32 and share a single mask rule:
+  valid(i, j) = j <= i + prefix OR not causal, AND i - j < window (if windowed)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.config import ModelConfig
+from repro.nn.layers import _init, apply_rope, init_rmsnorm, rmsnorm, rope_angles
+from repro.parallel.sharding import shard
+
+Params = Dict[str, Any]
+
+NEG_INF = -2.0e38
+
+
+# =================================================================== masks
+def _mask(
+    qpos: jax.Array, kpos: jax.Array, *, causal: bool, window: int, prefix_len: int
+) -> jax.Array:
+    """qpos (..., Q), kpos (..., K) -> bool (..., Q, K)."""
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    if causal:
+        ok = k <= q
+        if prefix_len:
+            ok = ok | (k < prefix_len)
+    else:
+        ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if window > 0:
+        ok = ok & (q - k < window)
+    return ok
+
+
+def _softmax_attend(q, k, v, mask, softcap: float) -> jax.Array:
+    """q (B,Q,Hkv,G,D), k/v (B,K,Hkv,D), mask (B|1,Q,K) -> (B,Q,Hkv,G,D)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+
+
+# ============================================================ chunked path
+def chunked_attention(
+    q: jax.Array,            # (B, Sq, Hkv, G, D)
+    k: jax.Array,            # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    prefix_len: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    B, Sq, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    if window > 0:
+        return _banded_attention(q, k, v, window=window, softcap=softcap,
+                                 q_chunk=q_chunk, unroll=unroll)
+
+    if softcap == 0.0:
+        # Flash path: custom-VJP online softmax — backward recomputes blocks
+        # instead of saving O(S²/chunk) probabilities (repro.nn.flash).
+        from repro.nn.flash import flash_chunked, flash_chunked_unrolled
+        qf = q.transpose(0, 2, 3, 1, 4).astype(jnp.float32)  # (B,Hkv,G,Sq,D)
+        kf = k.transpose(0, 2, 1, 3).astype(jnp.float32)     # (B,Hkv,Skv,D)
+        vf = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+        fn = flash_chunked_unrolled if unroll else flash_chunked
+        o = fn(qf, kf, vf, causal, prefix_len, q_chunk, kv_chunk)
+        return o.transpose(0, 3, 1, 2, 4)                    # (B,Sq,Hkv,G,D)
+
+    nq = math.ceil(Sq / q_chunk)
+    nk = math.ceil(Skv / kv_chunk)
+    q_pad = nq * q_chunk - Sq
+    k_pad = nk * kv_chunk - Skv
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    kp = kp.reshape(B, nk, kv_chunk, Hkv, D)
+    vp = vp.reshape(B, nk, kv_chunk, Hkv, D)
+
+    def outer(qi, q_blk):
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def inner(carry, blk):
+            m_run, l_run, acc = carry
+            kj, k_blk, v_blk = blk
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            ok = _mask(qpos, kpos, causal=causal, window=0, prefix_len=prefix_len)
+            ok = ok & (kpos < Skv)[None, :]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk",
+                           q_blk.astype(jnp.float32), k_blk.astype(jnp.float32))
+            s = s * scale
+            if softcap > 0:
+                s = softcap * jnp.tanh(s / softcap)
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+        if unroll:
+            carry = (m0, l0, a0)
+            for j in range(nk):
+                carry, _ = inner(carry, (jnp.int32(j), kp[:, j], vp[:, j]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                inner, (m0, l0, a0),
+                (jnp.arange(nk), kp.swapaxes(0, 1), vp.swapaxes(0, 1)),
+            )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)  # (B, qc, Hkv, G, D)
+
+    qp = qp.reshape(B, nq, q_chunk, Hkv, G, D)
+    if unroll:
+        outs = jnp.stack([outer(jnp.int32(i), qp[:, i]) for i in range(nq)], 0)
+    else:
+        outs = jax.lax.map(lambda args: outer(*args),
+                           (jnp.arange(nq), qp.swapaxes(0, 1)))
+    out = outs.swapaxes(0, 1).reshape(B, nq * q_chunk, Hkv, G, D)
+    return out[:, :Sq]
+
+
+def _banded_attention(q, k, v, *, window: int, softcap: float, q_chunk: int,
+                      unroll: bool = False):
+    """Sliding-window attention: each q chunk attends a static-size
+    [window + q_chunk] KV band fetched with dynamic_slice — O(S·w)."""
+    B, Sq, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    nq = math.ceil(Sq / q_chunk)
+    q_pad = nq * q_chunk - Sq
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0), (0, 0)))
+    band = window + q_chunk
+    # Left-pad K/V by `window` so the band slice start is never negative.
+    kp = jnp.pad(k, ((0, 0), (window, q_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, q_pad), (0, 0), (0, 0)))
+
+    def outer(qi, q_blk):
+        start = qi * q_chunk  # band covers original positions [start-w, start+qc)
+        k_blk = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+        qpos = start + jnp.arange(q_chunk)
+        kpos = start - window + jnp.arange(band)
+        ok = _mask(qpos, kpos, causal=True, window=window, prefix_len=0)
+        ok = ok & (kpos >= 0)[None, :] & (kpos < Skv)[None, :]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk",
+                       q_blk.astype(jnp.float32), k_blk.astype(jnp.float32)) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_blk.astype(jnp.float32))
+        return out
+
+    qp = qp.reshape(B, nq, q_chunk, Hkv, G, D)
+    if unroll:
+        outs = jnp.stack([outer(jnp.int32(i), qp[:, i]) for i in range(nq)], 0)
+    else:
+        outs = jax.lax.map(lambda args: outer(*args),
+                           (jnp.arange(nq), qp.swapaxes(0, 1)))
+    out = outs.swapaxes(0, 1).reshape(B, nq * q_chunk, Hkv, G, D)
+    return out[:, :Sq]
+
+
+
+# ======================================================== int8 KV cache
+def _kv_quant(x: jax.Array):
+    """Symmetric per-(token, head) int8 quantization of K/V slices.
+    x: (B, S, H, D) -> (codes int8, scale f32 (B, S, H))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def _kv_dequant(codes: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ================================================================== module
+def init_attention(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if cfg.attn_type == "mla":
+        p = {
+            "w_q": _init(ks[0], (d, cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)), 0),
+            "w_dkv": _init(ks[1], (d, cfg.kv_lora_rank), 0),
+            "w_kr": _init(ks[2], (d, cfg.qk_rope_dim), 0),
+            "w_uk": _init(ks[3], (cfg.kv_lora_rank, cfg.n_heads * cfg.qk_nope_dim), 0),
+            "w_uv": _init(ks[4], (cfg.kv_lora_rank, cfg.n_heads * cfg.v_head_dim), 0),
+            "w_o": _init(ks[5], (cfg.n_heads * cfg.v_head_dim, d), 0),
+            "kv_norm": init_rmsnorm(cfg.kv_lora_rank),
+        }
+    else:
+        p = {
+            "w_q": _init(ks[0], (d, cfg.q_dim), 0),
+            "w_k": _init(ks[1], (d, cfg.kv_dim), 0),
+            "w_v": _init(ks[2], (d, cfg.kv_dim), 0),
+            "w_o": _init(ks[3], (cfg.q_dim, d), 0),
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = init_rmsnorm(cfg.head_dim)
+            p["k_norm"] = init_rmsnorm(cfg.head_dim)
+    return p
+
+
+def attention_specs(cfg: ModelConfig) -> Params:
+    if cfg.attn_type == "mla":
+        s = {
+            "w_q": ("fsdp", "tp"), "w_dkv": ("fsdp", None), "w_kr": ("fsdp", None),
+            "w_uk": ("fsdp", "tp"), "w_uv": ("fsdp", "tp"), "w_o": ("tp", "fsdp"),
+            "kv_norm": {"scale": (None,)},
+        }
+    else:
+        s = {"w_q": ("fsdp", "tp"), "w_k": ("fsdp", "tp"),
+             "w_v": ("fsdp", "tp"), "w_o": ("tp", "fsdp")}
+        if cfg.qk_norm:
+            s["q_norm"] = {"scale": (None,)}
+            s["k_norm"] = {"scale": (None,)}
+    return s
+
+
+def _gqa_qkv(params, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dq->btq", x, params["w_q"].astype(x.dtype))
+    k = jnp.einsum("btd,dq->btq", x, params["w_k"].astype(x.dtype))
+    v = jnp.einsum("btd,dq->btq", x, params["w_v"].astype(x.dtype))
+    q = q.reshape(B, S, Hkv, H // Hkv, D)
+    k = k.reshape(B, S, Hkv, D)
+    v = v.reshape(B, S, Hkv, D)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    cos, sin = rope_angles(positions, D, cfg.rope_theta)
+    qf = q.reshape(B, S, Hkv * (H // Hkv), D)
+    qf = apply_rope(qf, cos, sin).reshape(B, S, Hkv, H // Hkv, D)
+    k = apply_rope(k, cos, sin)
+    return qf, k, v
+
+
+def attention(
+    params: Params,
+    x: jax.Array,                       # (B, S, d_model)
+    cfg: ModelConfig,
+    *,
+    layer_window: int = 0,
+    positions: Optional[jax.Array] = None,
+    prefix_len: int = 0,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_pos: Optional[jax.Array] = None,
+    make_cache: bool = False,
+    cache_len: int = 0,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Unified attention entry point.
+
+    * train:   cache=None, make_cache=False
+    * prefill: cache=None, make_cache=True (cache_len ≥ S)
+    * decode:  cache given, S == 1, cache_pos = current position
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :] if cache_pos is None else (
+            cache_pos[:, None] if cache_pos.ndim else
+            jnp.full((B, 1), cache_pos)
+        )
+        if positions.shape[0] == 1 and B > 1:
+            positions = jnp.broadcast_to(positions, (B, S))
+
+    if cfg.attn_type == "mla":
+        return _mla_attention(params, x, cfg, positions=positions,
+                              prefix_len=prefix_len, cache=cache,
+                              cache_pos=cache_pos, make_cache=make_cache,
+                              cache_len=cache_len)
+
+    q, k, v = _gqa_qkv(params, x, cfg, positions)
+    new_cache = None
+
+    if cache is not None:
+        # Decode: append to the ring/full cache then attend over it.  SWA
+        # layers keep a ring buffer of `window` slots (slot = pos % window).
+        ring = layer_window if 0 < layer_window < cache["k"].shape[1] else 0
+        slot = cache_pos % ring if ring else cache_pos
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _kv_quant(k)
+            vq, vs = _kv_quant(v)
+            kc8 = _dus_batch(cache["k"], kq, slot)
+            vc8 = _dus_batch(cache["v"], vq, slot)
+            kss = _dus_batch(cache["k_scale"], ks, slot)
+            vss = _dus_batch(cache["v_scale"], vs, slot)
+            kc8 = shard(kc8, "batch", "sp", None, None)
+            vc8 = shard(vc8, "batch", "sp", None, None)
+            new_cache = {"k": kc8, "v": vc8, "k_scale": kss, "v_scale": vss}
+            kc = _kv_dequant(kc8, kss, k.dtype)
+            vc = _kv_dequant(vc8, vss, v.dtype)
+        else:
+            kc = _dus_batch(cache["k"], k, slot)
+            vc = _dus_batch(cache["v"], v, slot)
+            kc = shard(kc, "batch", "sp", None, None)
+            vc = shard(vc, "batch", "sp", None, None)
+            new_cache = {"k": kc, "v": vc}
+        Sc = kc.shape[1]
+        kpos = jnp.arange(Sc)[None, :]
+        if ring:
+            # Absolute position held by slot i: the largest p ≤ cache_pos
+            # with p ≡ i (mod ring).
+            abs_pos = cache_pos - ((cache_pos - kpos) % ring)
+            valid = (abs_pos >= 0) & (abs_pos > cache_pos - ring)
+        else:
+            valid = kpos <= cache_pos
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        if cfg.logit_softcap > 0:
+            s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+    else:
+        if S <= 1024:
+            mask = _mask(positions, positions, causal=cfg.causal,
+                         window=layer_window, prefix_len=prefix_len)
+            o = _softmax_attend(q, k, v, mask, cfg.logit_softcap)
+        else:
+            o = chunked_attention(q, k, v, causal=cfg.causal,
+                                  window=layer_window if cfg.causal else 0,
+                                  prefix_len=prefix_len,
+                                  softcap=cfg.logit_softcap,
+                                  q_chunk=cfg.attn_q_chunk,
+                                  kv_chunk=cfg.attn_kv_chunk,
+                                  unroll=cfg.unroll_chunks)
+        if make_cache:
+            L = cache_len or S
+            ring = layer_window if 0 < layer_window < L else 0
+            Lc = ring if ring else L
+            int8 = cfg.kv_cache_dtype == "int8"
+            if int8:
+                k_st, ks_full = _kv_quant(k)
+                v_st, vs_full = _kv_quant(v)
+                kc = jnp.zeros((B, Lc, cfg.n_kv_heads, cfg.head_dim), jnp.int8)
+                ksc = jnp.zeros((B, Lc, cfg.n_kv_heads), jnp.float32)
+                vsc = jnp.zeros_like(ksc)
+            else:
+                k_st, v_st = k, v
+                kc = jnp.zeros((B, Lc, cfg.n_kv_heads, cfg.head_dim), k.dtype)
+            vc = jnp.zeros_like(kc)
+            if ring:
+                # Keep the last `ring` tokens at slot = pos % ring.
+                n_keep = min(S, ring)
+                keep_pos = jnp.arange(S - n_keep, S)
+                slots = keep_pos % ring
+                kc = kc.at[:, slots].set(k_st[:, -n_keep:])
+                vc = vc.at[:, slots].set(v_st[:, -n_keep:])
+                if int8:
+                    ksc = ksc.at[:, slots].set(ks_full[:, -n_keep:])
+                    vsc = vsc.at[:, slots].set(vs_full[:, -n_keep:])
+            else:
+                kc = kc.at[:, :S].set(k_st)
+                vc = vc.at[:, :S].set(v_st)
+                if int8:
+                    ksc = ksc.at[:, :S].set(ks_full)
+                    vsc = vsc.at[:, :S].set(vs_full)
+            kc = shard(kc, "batch", "sp", None, None)
+            vc = shard(vc, "batch", "sp", None, None)
+            new_cache = {"k": kc, "v": vc}
+            if int8:
+                new_cache.update({"k_scale": ksc, "v_scale": vsc})
+
+    o = o.astype(x.dtype).reshape(B, S, cfg.q_dim)
+    y = jnp.einsum("btq,qd->btd", o, params["w_o"].astype(x.dtype))
+    return y, new_cache
+
+
+def _dus_batch(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
+    """dynamic_update_slice along axis 1 at (possibly traced) position."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
+                                                   pos, axis=1)
+    # per-batch positions
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype), p, axis=0)
+    return jax.vmap(upd)(cache, new, pos)
+
+
+# ==================================================================== MLA
+def _mla_attention(params, x, cfg: ModelConfig, *, positions, prefix_len,
+                   cache, cache_pos, make_cache, cache_len):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    q = jnp.einsum("btd,dq->btq", x, params["w_q"].astype(x.dtype))
+    q = q.reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_angles(positions, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_kv = jnp.einsum("btd,dr->btr", x, params["w_dkv"].astype(x.dtype))
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = jnp.einsum("btd,dr->btr", x, params["w_kr"].astype(x.dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
+
+    new_cache = None
+    if cache is not None:
+        # ---- absorbed-matmul decode (DeepSeek-V2 §Low-Rank KV) ----
+        # Never materialize per-head K/V from the latent cache: fold W_uk
+        # into the query and W_uv into the output —
+        #   score = (q_nope W_ukᵀ)·c_kv + q_rope·k_rope
+        #   out   = W_uv (Σ_s p_s c_kv_s)
+        # FLOPs drop from O(S·r·H·(d_nope+d_v)) to O(S·r·H) per step
+        # (≈32× here; EXPERIMENTS.md §Perf iteration 6).
+        ckv_c = _dus_batch(cache["c_kv"], c_kv, cache_pos)
+        kr_c = _dus_batch(cache["k_rope"], k_rope, cache_pos)
+        ckv_c = shard(ckv_c, "batch", "sp", None)
+        kr_c = shard(kr_c, "batch", "sp", None)
+        new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
+        Sc = ckv_c.shape[1]
+        valid = (jnp.arange(Sc)[None, :] <= cache_pos)
+        w_uk = params["w_uk"].astype(jnp.float32).reshape(
+            cfg.kv_lora_rank, H, nope)
+        w_uv = params["w_uv"].astype(jnp.float32).reshape(
+            cfg.kv_lora_rank, H, vdim)
+        q_eff = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32), w_uk)
+        scale = 1.0 / math.sqrt(nope + rope_d)
+        s = jnp.einsum("bshr,bkr->bhsk", q_eff, ckv_c.astype(jnp.float32))
+        s = s + jnp.einsum("bshd,bkd->bhsk", q_rope.astype(jnp.float32),
+                           kr_c.astype(jnp.float32))
+        s = s * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhsk,bkr->bshr", p, ckv_c.astype(jnp.float32))
+        o = jnp.einsum("bshr,rhv->bshv", ctx, w_uv)
+        o = o.astype(x.dtype).reshape(B, S, H * vdim)
+        y = jnp.einsum("btq,qd->btd", o, params["w_o"].astype(x.dtype))
+        return y, new_cache
+
+    c_all, kr_all = c_kv, k_rope
+    Sc = S
+
+    k_nope = jnp.einsum("btr,rq->btq", c_all, params["w_uk"].astype(x.dtype))
+    k_nope = k_nope.reshape(B, Sc, H, nope)
+    vv = jnp.einsum("btr,rq->btq", c_all, params["w_uv"].astype(x.dtype))
+    vv = vv.reshape(B, Sc, H, vdim)
+
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :], (B, Sc, H, rope_d))],
+        axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+    qq = qq.reshape(B, S, H, 1, nope + rope_d)
+
+    if S <= 1024:
+        mask = _mask(positions, positions, causal=cfg.causal, window=0,
+                     prefix_len=prefix_len)
+        o = _softmax_attend(qq, k, vv, mask, 0.0)
+    else:
+        o = chunked_attention(qq, k, vv, causal=cfg.causal,
+                              prefix_len=prefix_len,
+                              q_chunk=cfg.attn_q_chunk,
+                              kv_chunk=cfg.attn_kv_chunk,
+                              unroll=cfg.unroll_chunks)
+    if make_cache:
+        L = cache_len or S
+        ckv_c = jnp.zeros((B, L, cfg.kv_lora_rank), c_kv.dtype).at[:, :S].set(c_kv)
+        kr_c = jnp.zeros((B, L, rope_d), k_rope.dtype).at[:, :S].set(k_rope)
+        new_cache = {"c_kv": shard(ckv_c, "batch", "sp", None),
+                     "k_rope": shard(kr_c, "batch", "sp", None)}
+
+    o = o.astype(x.dtype).reshape(B, S, H * vdim)
+    y = jnp.einsum("btq,qd->btd", o, params["w_o"].astype(x.dtype))
+    return y, new_cache

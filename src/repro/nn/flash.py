@@ -1,0 +1,194 @@
+"""Memory-lean chunked attention with a FlashAttention-2 style custom VJP.
+
+Plain AD through an online-softmax scan saves every block's probability
+matrix for backward — O(S²/chunk) bytes, ~17 GB per layer at 4k×16 heads.
+This implementation saves only (q, k, v, o, lse) and *recomputes* block
+probabilities in the backward pass, exactly like the TPU/GPU flash kernels:
+
+  fwd:  scan over kv blocks per q block → o, lse
+  bwd:  Δ = rowsum(do ⊙ o); per (kv, q) block: p = exp(qkᵀ − lse);
+        dv += pᵀdo; ds = p ⊙ (do vᵀ − Δ); dk += dsᵀq; dq += ds k
+
+GQA-native layout: q (B, Hkv, G, Sq, D) attends k/v (B, Hkv, Skv, D) without
+materializing repeated KV heads.  Mask rule: causal / prefix / encoder.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _block_mask(qpos, kpos, causal: bool, prefix_len: int, skv: int):
+    ok = (kpos < skv)[None, :]
+    if causal:
+        c = kpos[None, :] <= qpos[:, None]
+        if prefix_len:
+            c = c | (kpos < prefix_len)[None, :]
+        ok = ok & c
+    return ok
+
+
+def _attend_fwd(q, k, v, causal, prefix_len, q_chunk, kv_chunk):
+    """q: (B,Hkv,G,Sq,D); k: (B,Hkv,Skv,D); v: (B,Hkv,Skv,Dv) → (o, lse).
+    Dv may differ from D (MLA)."""
+    B, Hk, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    Dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(D)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    qp = jnp.pad(q, ((0, 0),) * 3 + ((0, nq * q_chunk - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0),) * 2 + ((0, nk * kv_chunk - Skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0),) * 2 + ((0, nk * kv_chunk - Skv), (0, 0)))
+    kp = kp.reshape(B, Hk, nk, kv_chunk, D)
+    vp = vp.reshape(B, Hk, nk, kv_chunk, Dv)
+
+    def per_q(i):
+        qb = jax.lax.dynamic_slice_in_dim(qp, i * q_chunk, q_chunk, axis=3)
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+
+        def body(carry, j):
+            m, l, acc = carry
+            kb, vb = kp[:, :, j], vp[:, :, j]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb) * scale
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            ok = _block_mask(qpos, kpos, causal, prefix_len, Skv)
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hk, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hk, G, q_chunk, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return o, lse
+
+    os_, lses = jax.lax.map(per_q, jnp.arange(nq))
+    o = jnp.moveaxis(os_, 0, 3).reshape(B, Hk, G, nq * q_chunk, Dv)[..., :Sq, :]
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, Hk, G, nq * q_chunk)[..., :Sq]
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_chunked(q, k, v, causal: bool = True, prefix_len: int = 0,
+                  q_chunk: int = 512, kv_chunk: int = 1024):
+    """q: (B,Hkv,G,Sq,D); k/v: (B,Hkv,Skv,D); f32.  → (B,Hkv,G,Sq,D)."""
+    o, _ = _attend_fwd(q, k, v, causal, prefix_len, q_chunk, kv_chunk)
+    return o
+
+
+def _vjp_fwd(q, k, v, causal, prefix_len, q_chunk, kv_chunk):
+    o, lse = _attend_fwd(q, k, v, causal, prefix_len, q_chunk, kv_chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, prefix_len, q_chunk, kv_chunk, res, do):
+    q, k, v, o, lse = res
+    B, Hk, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    Dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(D)
+    delta = jnp.sum(do * o, axis=-1)                     # (B,Hk,G,Sq)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    pq, pk = nq * q_chunk - Sq, nk * kv_chunk - Skv
+    qp = jnp.pad(q, ((0, 0),) * 3 + ((0, pq), (0, 0))).reshape(
+        B, Hk, G, nq, q_chunk, D)
+    dop = jnp.pad(do, ((0, 0),) * 3 + ((0, pq), (0, 0))).reshape(
+        B, Hk, G, nq, q_chunk, Dv)
+    lsep = jnp.pad(lse, ((0, 0),) * 3 + ((0, pq),),
+                   constant_values=1.0).reshape(B, Hk, G, nq, q_chunk)
+    dlt = jnp.pad(delta, ((0, 0),) * 3 + ((0, pq),)).reshape(
+        B, Hk, G, nq, q_chunk)
+    kp = jnp.pad(k, ((0, 0),) * 2 + ((0, pk), (0, 0))).reshape(
+        B, Hk, nk, kv_chunk, D)
+    vp = jnp.pad(v, ((0, 0),) * 2 + ((0, pk), (0, 0))).reshape(
+        B, Hk, nk, kv_chunk, Dv)
+
+    def kv_body(dq_acc, j):
+        kb, vb = kp[:, :, j], vp[:, :, j]
+        kpos = j * kv_chunk + jnp.arange(kv_chunk)
+
+        def q_body(carry, i):
+            dk_acc, dv_acc, dq_all = carry
+            qb = qp[:, :, :, i]
+            qpos = i * q_chunk + jnp.arange(q_chunk)
+            ok = _block_mask(qpos, kpos, causal, prefix_len, Skv)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb) * scale
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lsep[:, :, :, i][..., None])
+            dob = dop[:, :, :, i]
+            dv_acc = dv_acc + jnp.einsum("bhgqk,bhgqd->bhkd", p, dob)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", dob, vb)
+            ds = p * (dp - dlt[:, :, :, i][..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum("bhgqk,bhgqd->bhkd", ds, qb)
+            dq_blk = jnp.einsum("bhgqk,bhkd->bhgqd", ds, kb)
+            dq_all = jax.lax.dynamic_update_slice_in_dim(
+                dq_all, dq_blk, i * q_chunk, axis=3)
+            return (dk_acc, dv_acc, dq_all), None
+
+        dk0 = jnp.zeros((B, Hk, kv_chunk, D), jnp.float32)
+        dv0 = jnp.zeros((B, Hk, kv_chunk, Dv), jnp.float32)
+        dq_this = jnp.zeros((B, Hk, G, nq * q_chunk, D), jnp.float32)
+        (dk_j, dv_j, dq_this), _ = jax.lax.scan(
+            q_body, (dk0, dv0, dq_this), jnp.arange(nq))
+        return dq_acc + dq_this, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Hk, G, nq * q_chunk, D), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(kv_body, dq0, jnp.arange(nk))
+    dk = jnp.moveaxis(dk_b, 0, 2).reshape(B, Hk, nk * kv_chunk, D)[:, :, :Skv]
+    dv = jnp.moveaxis(dv_b, 0, 2).reshape(B, Hk, nk * kv_chunk, Dv)[:, :, :Skv]
+    return dq[..., :Sq, :], dk, dv
+
+
+flash_chunked.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def flash_chunked_unrolled(q, k, v, causal=True, prefix_len=0,
+                           q_chunk=2048, kv_chunk=2048):
+    """Dry-run cost-probe variant: identical math, python-unrolled loops so
+    XLA cost analysis sees every FLOP (plain AD; probes are never executed)."""
+    B, Hk, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    Dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(D)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    qp = jnp.pad(q, ((0, 0),) * 3 + ((0, nq * q_chunk - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0),) * 2 + ((0, nk * kv_chunk - Skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0),) * 2 + ((0, nk * kv_chunk - Skv), (0, 0)))
+    outs = []
+    for i in range(nq):
+        qb = qp[:, :, :, i * q_chunk:(i + 1) * q_chunk]
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        m = jnp.full((B, Hk, G, q_chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, Hk, G, q_chunk), jnp.float32)
+        acc = jnp.zeros((B, Hk, G, q_chunk, Dv), jnp.float32)
+        for j in range(nk):
+            kb = kp[:, :, j * kv_chunk:(j + 1) * kv_chunk]
+            vb = vp[:, :, j * kv_chunk:(j + 1) * kv_chunk]
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            ok = _block_mask(qpos, kpos, causal, prefix_len, Skv)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb) * scale
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+            m = m_new
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    o = jnp.concatenate(outs, axis=3)
+    return o[..., :Sq, :]

@@ -1,0 +1,405 @@
+"""State-space / recurrent blocks: Mamba (hymba) and xLSTM (mLSTM + sLSTM).
+
+Memory discipline on TPU: a naive scan over 4k+ timesteps would save every
+per-step state for the backward pass (O(S·state) — hundreds of GB for matrix
+states).  Two remedies are used:
+
+  * `chunked_scan` — outer scan over sequence chunks saving only boundary
+    states; the inner chunk is rematerialized in the backward pass.  Used for
+    Mamba's selective scan and the sLSTM (whose hidden-to-hidden recurrence
+    admits no parallel form).
+  * chunkwise-parallel mLSTM — the gated-linear-attention identity: within a
+    chunk the output is an attention-like masked matmul with cumulative decay
+    (all factors exp(c_t − c_s), s ≤ t, bounded ≤ 1 → numerically safe), and
+    only O(S/K) boundary matrix states cross chunks.  This is the TPU-native
+    adaptation of the mLSTM recurrence (MXU matmuls instead of a serial
+    scan).
+
+Deviation from the xLSTM paper (recorded in DESIGN.md): gates use sigmoid
+(log-sigmoid cumulative decay) instead of the exp-gate + max-stabilizer
+scheme; the paper itself reports sigmoid input gates are competitive, and the
+chunkwise factors stay in [0, 1] by construction.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.config import ModelConfig
+from repro.nn.layers import _init, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------- chunked scan
+def chunked_scan(step, carry, xs, chunk: int, remat: bool = True,
+                 unroll_outer: bool = False):
+    """lax.scan(step, carry, xs) but with chunk-boundary checkpointing.
+
+    xs leaves have leading dim S (padded to a multiple of ``chunk`` by the
+    caller).  Only S/chunk boundary carries are saved for backward; each
+    chunk's interior is recomputed.  ``unroll_outer`` unrolls the chunk loop
+    (dry-run cost probes).
+    """
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    assert S % chunk == 0, f"sequence {S} not a multiple of chunk {chunk}"
+    n = S // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    def run_chunk(c, x_chunk):
+        return jax.lax.scan(step, c, x_chunk)
+
+    if remat:
+        run_chunk = jax.checkpoint(run_chunk, prevent_cse=False)
+
+    if unroll_outer and n > 32:
+        # cost probes cap the unroll: beyond this the probe compile time
+        # explodes while the once-counted remainder (in-chunk cell ops) is
+        # ≪1% of the projection FLOPs (EXPERIMENTS.md §Roofline).
+        unroll_outer = False
+    if unroll_outer:
+        ys_list = []
+        for i in range(n):
+            carry, y = run_chunk(carry, jax.tree.map(lambda a, i=i: a[i], xs_c))
+            ys_list.append(y)
+        ys = jax.tree.map(lambda *a: jnp.stack(a, 0), *ys_list)
+    else:
+        carry, ys = jax.lax.scan(run_chunk, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+# ================================================================== Mamba
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    dt_rank = max(d // 16, 8)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": _init(ks[0], (d, 2 * di), 0),
+        "conv": jax.random.normal(ks[1], (cfg.ssm_conv_width, di)) * 0.1,
+        "w_xproj": _init(ks[2], (di, dt_rank + 2 * N), 0),
+        "w_dt": _init(ks[3], (dt_rank, di), 0),
+        "dt_bias": jnp.zeros((di,)),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,)),
+        "w_out": _init(ks[4], (di, d), 0),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> Params:
+    return {
+        "w_in": ("fsdp", "tp"), "conv": (None, "tp"),
+        "w_xproj": ("tp", None), "w_dt": (None, "tp"), "dt_bias": ("tp",),
+        "A_log": ("tp", None), "D": ("tp",), "w_out": ("tp", "fsdp"),
+    }
+
+
+def _mamba_conv(x: jax.Array, conv_w: jax.Array,
+                conv_state: Optional[jax.Array] = None):
+    """Causal depthwise conv over seq.  x: (B, S, di), conv_w: (W, di)."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * conv_w[i].astype(x.dtype)
+              for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return out, new_state
+
+
+def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
+          cache: Optional[Params] = None, chunk: int = 256,
+          make_cache: bool = False
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: (B, S, d).  cache = {conv, h} for decode (S == 1)."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    dt_rank = params["w_dt"].shape[0]
+
+    u = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    x_in, z = jnp.split(u, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    x_c, new_conv = _mamba_conv(x_in, params["conv"], conv_state)
+    x_c = jax.nn.silu(x_c)
+
+    xdbc = jnp.einsum("bse,ef->bsf", x_c, params["w_xproj"].astype(x.dtype))
+    dt_in, Bc, Cc = jnp.split(xdbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, params["w_dt"].astype(x.dtype))
+        .astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])  # (di, N)
+
+    def step(h, inp):
+        xc_t, dt_t, b_t, c_t = inp  # (B,di),(B,di),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None] * A)                      # (B,di,N)
+        dBx = dt_t[..., None] * b_t[:, None, :] * xc_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("ben,bn->be", h, c_t)
+        return h, y
+
+    if cache is not None:
+        h0 = cache["h"]
+        xs = (x_c[:, 0].astype(jnp.float32), dt[:, 0],
+              Bc[:, 0].astype(jnp.float32), Cc[:, 0].astype(jnp.float32))
+        h1, y = step(h0, xs)
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "h": h1}
+    else:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        xs = (x_c.swapaxes(0, 1).astype(jnp.float32), dt.swapaxes(0, 1),
+              Bc.swapaxes(0, 1).astype(jnp.float32),
+              Cc.swapaxes(0, 1).astype(jnp.float32))
+        pad = (-S) % chunk
+        if pad:
+            xs = jax.tree.map(
+                lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)), xs)
+        hT, ys = chunked_scan(step, h0, xs, chunk=min(chunk, S + pad),
+                              unroll_outer=cfg.unroll_chunks)
+        y = ys[:S].swapaxes(0, 1)
+        new_cache = None
+        if make_cache:
+            # prefill: hand the final recurrent + conv state to decode
+            new_cache = {"conv": new_conv, "h": hT}
+
+    y = y.astype(x.dtype) + params["D"].astype(x.dtype) * x_c
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Params:
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+# ================================================================== mLSTM
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": _init(ks[0], (d, 2 * di), 0),     # -> (x_m, z)
+        "w_q": _init(ks[1], (di, di), 0),
+        "w_k": _init(ks[2], (di, di), 0),
+        "w_v": _init(ks[3], (di, di), 0),
+        "w_if": _init(ks[4], (di, 2 * cfg.ssm_heads), 0),
+        "if_bias": jnp.concatenate([jnp.zeros((cfg.ssm_heads,)),
+                                    3.0 * jnp.ones((cfg.ssm_heads,))]),
+        "norm": init_rmsnorm(di),
+        "w_out": _init(ks[5], (di, d), 0),
+    }
+
+
+def mlstm_specs(cfg: ModelConfig) -> Params:
+    return {
+        "w_in": ("fsdp", "tp"), "w_q": ("fsdp", "tp"), "w_k": ("fsdp", "tp"),
+        "w_v": ("fsdp", "tp"), "w_if": ("fsdp", None), "if_bias": (None,),
+        "norm": {"scale": (None,)}, "w_out": ("tp", "fsdp"),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_f, i_gate, S0, n0):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q,k,v: (B,H,K,D); log_f,i_gate: (B,H,K); S0: (B,H,D,D); n0: (B,H,D).
+    Returns (y (B,H,K,D), S1, n1).  All decay factors are exp of
+    *differences* of the cumulative log-forget c, hence ≤ 1.
+    """
+    c = jnp.cumsum(log_f, axis=-1)                      # (B,H,K)
+    c_last = c[..., -1:]
+    # Inter-chunk contribution: q_t · S0 scaled by exp(c_t).
+    y_inter = jnp.einsum("bhkd,bhde->bhke", q, S0) * jnp.exp(c)[..., None]
+    n_inter = jnp.einsum("bhkd,bhd->bhk", q, n0) * jnp.exp(c)
+    # Intra-chunk: A[t,s] = exp(c_t - c_s) · i_s  for s ≤ t.
+    decay = jnp.exp(c[..., :, None] - c[..., None, :])
+    mask = jnp.tril(jnp.ones((q.shape[2], q.shape[2]), bool))
+    A = jnp.where(mask, decay * i_gate[..., None, :], 0.0)
+    scores = jnp.einsum("bhkd,bhsd->bhks", q, k) * A
+    y_intra = jnp.einsum("bhks,bhsd->bhkd", scores, v)
+    # n_t = Σ_{s≤t} exp(c_t-c_s) i_s k_s  + exp(c_t) n0 ;  denom = max(|q·n|,1)
+    n_vec = jnp.einsum("bhks,bhsd->bhkd", A, k)
+    qn = jnp.einsum("bhkd,bhkd->bhk", q, n_vec) + n_inter
+    denom = jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+    y = (y_inter + y_intra) / denom
+    # State update to chunk end.
+    w = jnp.exp(c_last - c) * i_gate                    # (B,H,K)
+    S1 = jnp.exp(c_last)[..., None] * S0 + jnp.einsum(
+        "bhk,bhkd,bhke->bhde", w, k, v)
+    n1 = jnp.exp(c_last) * n0 + jnp.einsum("bhk,bhkd->bhd", w, k)
+    return y, S1, n1
+
+
+def mlstm(params: Params, x: jax.Array, cfg: ModelConfig,
+          cache: Optional[Params] = None, chunk: int = 256,
+          make_cache: bool = False
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.ssm_heads
+    D = di // H
+
+    u = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    xm, z = jnp.split(u, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", xm, params["w_q"].astype(x.dtype))
+    k = jnp.einsum("bse,ef->bsf", xm, params["w_k"].astype(x.dtype)) / math.sqrt(D)
+    v = jnp.einsum("bse,ef->bsf", xm, params["w_v"].astype(x.dtype))
+    gates = jnp.einsum("bse,eg->bsg", xm, params["w_if"].astype(x.dtype))
+    gates = gates.astype(jnp.float32) + params["if_bias"]
+    i_gate = jax.nn.sigmoid(gates[..., :H])            # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gates[..., H:])         # (B,S,H) ≤ 0
+
+    def heads(t):  # (B,S,di) -> (B,H,S,D)
+        return t.reshape(B, S, H, D).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    qh, kh, vh = heads(q), heads(k), heads(v)
+    i_g = i_gate.transpose(0, 2, 1)
+    lf = log_f.transpose(0, 2, 1)
+
+    if cache is not None:  # decode: single step, direct recurrence
+        S0, n0 = cache["S"], cache["n"]
+        f1 = jnp.exp(lf[..., 0])                       # (B,H)
+        i1 = i_g[..., 0]
+        S1 = f1[..., None, None] * S0 + i1[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kh[:, :, 0], vh[:, :, 0])
+        n1 = f1[..., None] * n0 + i1[..., None] * kh[:, :, 0]
+        qn = jnp.einsum("bhd,bhd->bh", qh[:, :, 0], n1)
+        y = jnp.einsum("bhd,bhde->bhe", qh[:, :, 0], S1)
+        y = y / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+        y = y[:, :, None, :]                           # (B,H,1,D)
+        new_cache = {"S": S1, "n": n1}
+    else:
+        pad = (-S) % chunk
+        Kc = min(chunk, S + pad)
+        nch = (S + pad) // Kc
+
+        def pad_seq(t, axis):
+            cfg_pad = [(0, 0)] * t.ndim
+            cfg_pad[axis] = (0, pad)
+            return jnp.pad(t, cfg_pad)
+
+        qh, kh, vh = (pad_seq(t, 2) for t in (qh, kh, vh))
+        i_g, lf = pad_seq(i_g, 2), pad_seq(lf, 2)
+        qc = qh.reshape(B, H, nch, Kc, D).transpose(2, 0, 1, 3, 4)
+        kc = kh.reshape(B, H, nch, Kc, D).transpose(2, 0, 1, 3, 4)
+        vc = vh.reshape(B, H, nch, Kc, D).transpose(2, 0, 1, 3, 4)
+        ic = i_g.reshape(B, H, nch, Kc).transpose(2, 0, 1, 3)
+        fc = lf.reshape(B, H, nch, Kc).transpose(2, 0, 1, 3)
+
+        def step(carry, xs):
+            S0, n0 = carry
+            qx, kx, vx, ix, fx = xs
+            y, S1, n1 = _mlstm_chunk(qx, kx, vx, fx, ix, S0, n0)
+            return (S1, n1), y
+
+        S0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        if cfg.unroll_chunks and nch <= 32:  # cost probes (cap: compile time)
+            carry, ys_l = (S0, n0), []
+            for t in range(nch):
+                carry, y = step(carry, (qc[t], kc[t], vc[t], ic[t], fc[t]))
+                ys_l.append(y)
+            (S1, n1), ys = carry, jnp.stack(ys_l, 0)
+        else:
+            (S1, n1), ys = jax.lax.scan(step, (S0, n0), (qc, kc, vc, ic, fc))
+        y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S + pad, D)[:, :, :S]
+        new_cache = {"S": S1, "n": n1} if make_cache else None
+
+    y = y.transpose(0, 2, 1, 3).reshape(B, -1, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z[:, : y.shape[1]])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    di = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads
+    D = di // H
+    return {"S": jnp.zeros((batch, H, D, D), jnp.float32),
+            "n": jnp.zeros((batch, H, D), jnp.float32)}
+
+
+# ================================================================== sLSTM
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.ssm_heads
+    D = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": _init(ks[0], (d, 4 * d), 0),        # i, f, z, o pre-acts
+        "r_gates": jax.random.normal(ks[1], (H, D, 4 * D)) / math.sqrt(D),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((d,)), 2.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]),
+        "norm": init_rmsnorm(d),
+        "w_out": _init(ks[2], (d, d), 0),
+    }
+
+
+def slstm_specs(cfg: ModelConfig) -> Params:
+    return {"w_gates": ("fsdp", "tp"), "r_gates": (None, None, None),
+            "gate_bias": (None,), "norm": {"scale": (None,)},
+            "w_out": ("fsdp", "tp")}
+
+
+def slstm(params: Params, x: jax.Array, cfg: ModelConfig,
+          cache: Optional[Params] = None, chunk: int = 128,
+          make_cache: bool = False
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    B, S, d = x.shape
+    H = cfg.ssm_heads
+    D = d // H
+    pre = jnp.einsum("bsd,dg->bsg", x, params["w_gates"].astype(x.dtype))
+    pre = pre.astype(jnp.float32) + params["gate_bias"]
+
+    r_g = params["r_gates"]
+
+    def step(carry, p_t):
+        c, n, h = carry                                 # (B,H,D) each
+        rec = jnp.einsum("bhd,hdg->bhg", h, r_g)        # (B,H,4D)
+        g = p_t.reshape(B, H, 4 * D) + rec
+        i_, f_, z_, o_ = jnp.split(g, 4, axis=-1)
+        i_ = jnp.exp(jnp.minimum(i_, 10.0))             # exp input gate, capped
+        f_ = jax.nn.sigmoid(f_)
+        z_ = jnp.tanh(z_)
+        o_ = jax.nn.sigmoid(o_)
+        c = f_ * c + i_ * z_
+        n = f_ * n + i_
+        h = o_ * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, h), h
+
+    if cache is not None:
+        carry = (cache["c"], cache["n"], cache["h"])
+        carry, h = step(carry, pre[:, 0])
+        y = h[:, None]
+        new_cache = dict(zip(("c", "n", "h"), carry))
+    else:
+        zero = jnp.zeros((B, H, D), jnp.float32)
+        pad = (-S) % chunk
+        xs = jnp.pad(pre, ((0, 0), (0, pad), (0, 0))).swapaxes(0, 1)
+        carry, ys = chunked_scan(step, (zero, zero, zero), xs,
+                                 chunk=min(chunk, S + pad),
+                                 unroll_outer=cfg.unroll_chunks)
+        y = ys[:S].swapaxes(0, 1)
+        new_cache = dict(zip(("c", "n", "h"), carry)) if make_cache else None
+
+    y = y.reshape(B, -1, d).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y, params["w_out"].astype(x.dtype)), new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    H = cfg.ssm_heads
+    D = cfg.d_model // H
+    z = jnp.zeros((batch, H, D), jnp.float32)
+    return {"c": z, "n": z, "h": z}

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import cosine, wsd
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine", "wsd"]

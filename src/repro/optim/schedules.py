@@ -1,0 +1,25 @@
+"""LR schedules: cosine and WSD (Warmup-Stable-Decay, MiniCPM §4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, stable: int, decay: int,
+        floor: float = 0.01):
+    """MiniCPM's Warmup-Stable-Decay: linear warmup, long flat stage, short
+    exponential-ish (here linear-in-log) decay to `floor`·peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+    dec = peak_lr * jnp.exp(jnp.log(floor) * t)
+    out = jnp.where(step < warmup, warm,
+                    jnp.where(step < warmup + stable, peak_lr, dec))
+    return out

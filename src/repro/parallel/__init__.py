@@ -1,0 +1,15 @@
+"""Distribution substrate: mesh-aware sharding rules and collectives."""
+from repro.parallel.sharding import (
+    MeshCtx,
+    batch_axes,
+    current_mesh,
+    make_spec,
+    set_mesh,
+    shard,
+    use_mesh,
+)
+
+__all__ = [
+    "MeshCtx", "batch_axes", "current_mesh", "make_spec", "set_mesh",
+    "shard", "use_mesh",
+]

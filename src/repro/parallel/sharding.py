@@ -1,0 +1,111 @@
+"""Logical-axis sharding rules over the production mesh.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  The ``pod`` axis is pure data parallelism; ``data`` carries both
+batch sharding and FSDP weight sharding; ``model`` carries tensor/expert/
+sequence parallelism.
+
+Logical axes used throughout the model code:
+
+  batch   -> ("pod", "data")      activations' batch dim
+  fsdp    -> "data"               weight shards (ZeRO-3 style)
+  tp      -> "model"              heads / mlp / vocab / expert dims
+  sp      -> "model"              sequence dim of the residual stream &
+                                  KV caches (sequence parallelism)
+
+On a single CPU device (tests, smoke runs) no mesh is installed and every
+constraint is a no-op, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class MeshCtx:
+    mesh: Mesh
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def has_pod(self) -> bool:
+        return "pod" in self.axis_names
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _STATE.ctx = MeshCtx(mesh) if mesh is not None else None
+
+
+def current_mesh() -> Optional[MeshCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Install `mesh` in this package's registry.  All sharding constraints
+    and in/out_shardings are explicit NamedShardings built from it, so no
+    jax-global mesh context is required."""
+    prev = current_mesh()
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def batch_axes() -> Axis:
+    ctx = current_mesh()
+    if ctx is None:
+        return None
+    return ("pod", "data") if ctx.has_pod else ("data",)
+
+
+_LOGICAL = {
+    "fsdp": "data",
+    "tp": "model",
+    "sp": "model",
+}
+
+
+def _resolve(axis: Axis) -> Axis:
+    if axis == "batch":
+        return batch_axes()
+    if isinstance(axis, str):
+        return _LOGICAL.get(axis, axis)
+    return axis
+
+
+def make_spec(*axes: Axis) -> P:
+    """Build a PartitionSpec from logical axis names ('batch', 'fsdp', 'tp',
+    'sp', None).  Unknown names pass through as raw mesh axes."""
+    return P(*[_resolve(a) for a in axes])
+
+
+def shard(x: jax.Array, *axes: Axis) -> jax.Array:
+    """with_sharding_constraint under the installed mesh; no-op without one."""
+    ctx = current_mesh()
+    if ctx is None:
+        return x
+    spec = make_spec(*axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec)
+    )
+
+
+def named_sharding(*axes: Axis) -> Optional[NamedSharding]:
+    ctx = current_mesh()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, make_spec(*axes))

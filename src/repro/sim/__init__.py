@@ -1,0 +1,14 @@
+"""Event-driven simulation of the ARAS accelerator and a TPU-like baseline."""
+from repro.sim.energy import EnergyModel
+from repro.sim.aras import ArasSimConfig, SimResult, simulate_aras, upper_bound_cycles
+from repro.sim.tpu import TpuConfig, simulate_tpu
+
+__all__ = [
+    "EnergyModel",
+    "ArasSimConfig",
+    "SimResult",
+    "simulate_aras",
+    "upper_bound_cycles",
+    "TpuConfig",
+    "simulate_tpu",
+]

@@ -1,0 +1,14 @@
+"""ARAS-on-TPU: layer-streaming execution with delta-encoded weight installs.
+
+The paper's machine writes layer weights into a limited crossbar pool while
+computing earlier layers; here the pool is a device-HBM weight arena and the
+writes are host→device DMA of INT8 deltas (DESIGN.md §2, Pillar B).
+"""
+from repro.streaming.plan import StreamPlan, build_stream_plan, TpuLinkModel
+from repro.streaming.delta import QuantizedStore, delta_bytes
+from repro.streaming.executor import StreamingExecutor
+
+__all__ = [
+    "StreamPlan", "build_stream_plan", "TpuLinkModel",
+    "QuantizedStore", "delta_bytes", "StreamingExecutor",
+]

@@ -1,0 +1,123 @@
+"""Delta-encoded INT8 weight installs with §V-C mean-centering.
+
+Host side keeps every layer's weights as uint8 codes (plus dequant params).
+Installing layer Y into an arena slot holding layer X ships
+``delta = codes_Y - codes_X`` (int16 host-side, int8 stream after the cell
+decomposition); cells whose 2-bit planes are equal are skipped entirely via
+a run-length skip list, so bytes-on-wire track the paper's pulse counts.
+
+The §V-C re-encoding (shift every layer's code mean to a common Center,
+compensated through the zero point — `repro.core.weight_reuse`) maximizes
+equal MSB cells across layers and therefore the skip ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.weight_reuse import encode_network
+from repro.xbar.cells import CELLS_PER_WEIGHT
+
+
+def _cells(codes: np.ndarray) -> np.ndarray:
+    c = codes.astype(np.int16).reshape(-1, 1)
+    shifts = np.arange(CELLS_PER_WEIGHT) * 2
+    return (c >> shifts) & 0x3
+
+
+def delta_bytes(old: np.ndarray, new: np.ndarray) -> Tuple[int, float]:
+    """Bytes-on-wire for an entropy-coded cell-delta stream + skip ratio.
+
+    The install ships per-cell level deltas in [-3, 3].  A range coder on
+    that stream achieves the empirical entropy H(Δ) bits/cell (+ a 16-byte
+    frequency table); mean-centering (§V-C) concentrates Δ at 0, which is
+    exactly what shrinks H — the information-theoretic counterpart of
+    skipped ReRAM pulses.  RLE framing was measured strictly worse on
+    fragmented skip patterns (isolated equal cells cost a run token each);
+    see EXPERIMENTS.md §Perf iteration 3."""
+    co, cn = _cells(old), _cells(new)
+    delta = (cn - co).reshape(-1)
+    n = delta.size
+    counts = np.bincount(delta + 3, minlength=7).astype(np.float64)
+    probs = counts[counts > 0] / n
+    entropy_bits = float(-(probs * np.log2(probs)).sum())
+    payload = int(np.ceil(n * entropy_bits / 8.0)) + 16
+    skip = float(counts[3] / n)  # Δ == 0
+    return payload, skip
+
+
+@dataclasses.dataclass
+class LayerWeights:
+    """One layer's quantized tensors, flattened into a single code vector for
+    transfer accounting plus per-tensor views for compute."""
+
+    name: str
+    codes: np.ndarray                 # uint8, concatenated
+    shapes: List[Tuple[int, ...]]
+    sizes: List[int]
+    scales: List[np.ndarray]
+    zero_points: List[np.ndarray]     # offset-compensated (Eq. 7)
+    offset: int = 0
+
+    def tensor(self, i: int) -> np.ndarray:
+        start = sum(self.sizes[:i])
+        return self.codes[start:start + self.sizes[i]].reshape(self.shapes[i])
+
+    def dequant(self, i: int) -> np.ndarray:
+        t = self.tensor(i).astype(np.float32)
+        return (t - self.zero_points[i]) * self.scales[i]
+
+
+class QuantizedStore:
+    """Host-resident quantized model with cross-layer re-encoding."""
+
+    def __init__(self, layers: Sequence[Tuple[str, List[np.ndarray]]],
+                 reuse: bool = True, max_clip_rate: float = 4e-3):
+        # Quantize each tensor per-tensor (uint8 affine).
+        self.layers: List[LayerWeights] = []
+        concat_codes = []
+        for name, tensors in layers:
+            codes, shapes, sizes, scales, zps = [], [], [], [], []
+            for w in tensors:
+                lo, hi = float(w.min()), float(w.max())
+                scale = max(hi - lo, 1e-8) / 255.0
+                zp = -lo / scale
+                c = np.clip(np.round(w / scale + zp), 0, 255).astype(np.uint8)
+                codes.append(c.reshape(-1))
+                shapes.append(w.shape)
+                sizes.append(w.size)
+                scales.append(np.float32(scale))
+                zps.append(np.float32(zp))
+            cat = np.concatenate(codes) if codes else np.zeros(0, np.uint8)
+            self.layers.append(LayerWeights(name, cat, shapes, sizes, scales, zps))
+            concat_codes.append((name, cat))
+
+        self.center: Optional[int] = None
+        if reuse:
+            encs, center = encode_network(concat_codes, enabled=True,
+                                          max_clip_rate=max_clip_rate)
+            self.center = center
+            for lw, enc in zip(self.layers, encs):
+                if enc.offset:
+                    shifted = np.clip(lw.codes.astype(np.int32) + enc.offset,
+                                      0, 255).astype(np.uint8)
+                    lw.codes = shifted
+                    lw.offset = enc.offset
+                    # Eq. 7: compensate through the zero point.
+                    lw.zero_points = [zp + enc.offset for zp in lw.zero_points]
+
+    def install_cost(self, resident: Optional[int], incoming: int
+                     ) -> Tuple[int, float]:
+        """(bytes-on-wire, skip ratio) to put layer `incoming` into a slot
+        currently holding `resident` (None = cold slot → full stream)."""
+        new = self.layers[incoming].codes
+        if resident is None:
+            return new.size, 0.0
+        old = self.layers[resident].codes
+        n = min(old.size, new.size)
+        if n == 0:
+            return new.size, 0.0
+        b, skip = delta_bytes(old[:n], new[:n])
+        return b + (new.size - n), skip

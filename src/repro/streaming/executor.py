@@ -1,0 +1,215 @@
+"""Layer-streaming executor: run a model whose weights do not fit the device
+weight arena, overlapping each layer's compute with the delta-encoded
+install of upcoming layers (paper Fig 8, DMA edition).
+
+Mechanics:
+  * big tensors (ndim ≥ 2) of each block are quantized to uint8 codes in a
+    host `QuantizedStore` (with §V-C re-encoding); small tensors (norm
+    scales, biases) stay fp32 and permanently device-resident;
+  * a slot's occupant is updated by shipping ``delta = (new − old) mod 256``
+    — one byte per weight on the demo path, while the *accounted* wire bytes
+    use the 2-bit-cell skip-list stream (`delta.delta_bytes`), the TPU
+    analogue of skipped ReRAM pulses;
+  * installs are issued ahead of use (`jax.device_put` is async), compute of
+    layer i runs while layers i+1… transfer — the double-buffering the
+    static `StreamPlan` prescribes;
+  * every compute is a jitted per-layer function that dequantizes the code
+    vector (Eq. 7 zero-point compensation folded in) and applies the block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.config import ModelConfig
+from repro.nn.layers import rmsnorm, unembed
+from repro.nn.transformer import apply_block
+from repro.streaming.delta import QuantizedStore
+from repro.streaming.plan import StreamLayer, StreamPlan, TpuLinkModel, build_stream_plan
+
+QUANT_MIN_SIZE = 1024  # tensors smaller than this stay fp32-resident
+
+
+def _split_block_params(bp: Any) -> Tuple[List[np.ndarray], Any, List[bool]]:
+    """Flatten a block's params into (big tensors, treedef, is_quantized)."""
+    leaves, treedef = jax.tree_util.tree_flatten(bp)
+    big = [np.asarray(l, np.float32) for l in leaves
+           if l.ndim >= 2 and l.size >= QUANT_MIN_SIZE]
+    flags = [l.ndim >= 2 and l.size >= QUANT_MIN_SIZE for l in leaves]
+    return big, treedef, flags
+
+
+@dataclasses.dataclass
+class InstallStats:
+    raw_bytes: int = 0
+    wire_bytes: int = 0
+    installs: int = 0
+    skips: float = 0.0
+
+    @property
+    def mean_skip(self) -> float:
+        return self.skips / max(self.installs, 1)
+
+
+class StreamingExecutor:
+    def __init__(self, params: Any, cfg: ModelConfig, *,
+                 arena_slots: int = 2, reuse: bool = True,
+                 link: TpuLinkModel = TpuLinkModel(), plan_tokens: int = 1):
+        from repro.nn.transformer import stack_plan
+        blocks = []
+        for seg_params, (start, length, scanned) in zip(
+                params["stack"]["segments"], stack_plan(cfg)):
+            if scanned:
+                blocks.extend(
+                    jax.tree.map(lambda a, i=i: np.asarray(a[i]), seg_params)
+                    for i in range(length))
+            else:
+                blocks.append(seg_params)
+        self.cfg = cfg
+        self.n_layers = len(blocks)
+        self.arena_slots = arena_slots
+
+        self.treedefs, self.flags, self.small, metas = [], [], [], []
+        store_input = []
+        for i, bp in enumerate(blocks):
+            big, treedef, flags = _split_block_params(bp)
+            leaves = jax.tree_util.tree_flatten(bp)[0]
+            small = [jnp.asarray(l) for l, f in zip(leaves, flags) if not f]
+            self.treedefs.append(treedef)
+            self.flags.append(flags)
+            self.small.append(small)
+            store_input.append((f"L{i}", big))
+        self.store = QuantizedStore(store_input, reuse=reuse)
+
+        # resident fp32 top-level params
+        self.embedding = jax.tree.map(jnp.asarray, params["embedding"])
+        self.final_norm = jax.tree.map(jnp.asarray, params["final_norm"])
+
+        # device arena: slot -> (layer_id | None, device uint8 codes)
+        self.slots: List[Tuple[Optional[int], Optional[jax.Array]]] = [
+            (None, None) for _ in range(arena_slots)]
+        self.layer_slot: Dict[int, int] = {}
+        self.stats = InstallStats()
+
+        # plan
+        tokens = plan_tokens
+        stream_layers = [
+            StreamLayer(
+                name=f"L{i}",
+                bytes_int8=max(int(self.store.layers[i].codes.size), 1),
+                flops_per_token=2.0 * float(self.store.layers[i].codes.size),
+                tokens=tokens)
+            for i in range(self.n_layers)
+        ]
+        slot_bytes = max(l.bytes_int8 for l in stream_layers)
+        self.plan: StreamPlan = build_stream_plan(
+            stream_layers, hbm_weight_budget_bytes=arena_slots * slot_bytes,
+            link=link, slot_bytes=slot_bytes, replication=False)
+
+        self._compute_fns: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------ install
+    def _pick_slot(self, layer: int) -> int:
+        for s, (occ, _) in enumerate(self.slots):
+            if occ is None:
+                return s
+        # evict the resident layer furthest in the past (lowest id < layer)
+        occupants = [(occ, s) for s, (occ, _) in enumerate(self.slots)]
+        return min(occupants)[1]
+
+    def install(self, layer: int) -> None:
+        if layer in self.layer_slot:
+            return
+        s = self._pick_slot(layer)
+        occ, codes_dev = self.slots[s]
+        new_codes = self.store.layers[layer].codes
+        wire, skip = self.store.install_cost(occ, layer)
+        self.stats.raw_bytes += new_codes.size
+        self.stats.wire_bytes += wire
+        self.stats.installs += 1
+        self.stats.skips += skip
+        if occ is None or codes_dev is None or codes_dev.size != new_codes.size:
+            codes_dev = jax.device_put(new_codes)  # cold install: full stream
+        else:
+            old_codes = self.store.layers[occ].codes
+            n = min(old_codes.size, new_codes.size)
+            delta = (new_codes[:n].astype(np.int16)
+                     - old_codes[:n].astype(np.int16)) % 256
+            delta_dev = jax.device_put(delta.astype(np.uint8))
+            from repro.kernels.delta_apply.ops import apply_delta
+            codes_dev = apply_delta(codes_dev[:n], delta_dev)
+            self.layer_slot.pop(occ, None)
+        self.slots[s] = (layer, codes_dev)
+        self.layer_slot[layer] = s
+
+    # ------------------------------------------------------------ compute
+    def _compute_fn(self, layer: int):
+        if layer in self._compute_fns:
+            return self._compute_fns[layer]
+        cfg = self.cfg
+        lw = self.store.layers[layer]
+        treedef = self.treedefs[layer]
+        flags = self.flags[layer]
+        sizes, shapes = lw.sizes, lw.shapes
+        scales = [float(s) for s in lw.scales]
+        zps = [float(z) for z in lw.zero_points]
+
+        def fn(codes: jax.Array, small: List[jax.Array], x: jax.Array):
+            tensors = []
+            off = 0
+            for sz, shp, sc, zp in zip(sizes, shapes, scales, zps):
+                c = jax.lax.dynamic_slice_in_dim(codes, off, sz)
+                t = (c.astype(jnp.float32) - zp) * sc
+                tensors.append(t.reshape(shp).astype(jnp.bfloat16))
+                off += sz
+            leaves, ti, si = [], 0, 0
+            for f in flags:
+                if f:
+                    leaves.append(tensors[ti]); ti += 1
+                else:
+                    leaves.append(small[si]); si += 1
+            bp = jax.tree_util.tree_unflatten(treedef, leaves)
+            y, _, _ = apply_block(bp, x, cfg, layer)
+            return y
+
+        jitted = jax.jit(fn)
+        self._compute_fns[layer] = jitted
+        return jitted
+
+    def forward(self, batch: Dict[str, Any], prefetch: int = 1
+                ) -> Tuple[jax.Array, Dict[str, float]]:
+        """Full forward pass following the streaming plan."""
+        from repro.nn.model import _inputs_to_x
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        x, _ = _inputs_to_x({"embedding": self.embedding}, batch, cfg)
+        for i in range(min(prefetch + 1, self.n_layers)):
+            self.install(i)
+        for i in range(self.n_layers):
+            self.install(i)
+            codes = self.slots[self.layer_slot[i]][1]
+            x = self._compute_fn(i)(codes, self.small[i], x)
+            # overlap: kick off upcoming installs while the device computes
+            for j in range(i + 1, min(i + 1 + prefetch, self.n_layers)):
+                if len(self.layer_slot) < self.arena_slots or j == i + 1:
+                    self.install(j)
+        x = rmsnorm(self.final_norm, x, cfg.norm_eps)
+        logits = unembed(self.embedding, x, cfg)
+        logits.block_until_ready()
+        wall = time.perf_counter() - t0
+        m = {
+            "wall_s": wall,
+            "raw_bytes": float(self.stats.raw_bytes),
+            "wire_bytes": float(self.stats.wire_bytes),
+            "mean_skip": self.stats.mean_skip,
+            "plan_makespan_s": self.plan.makespan_s,
+            "plan_serial_s": self.plan.serial_makespan_s,
+            "plan_overlap_speedup": self.plan.overlap_speedup,
+            "reuse_center": float(self.store.center or 0),
+        }
+        return logits, m

@@ -1,0 +1,165 @@
+"""Static streaming schedule: the ARAS offline scheduler retargeted at a
+device-HBM weight arena.
+
+Resource mapping (DESIGN.md §2):
+    crossbar rows  → arena slots (fixed-size HBM bins)
+    ReRAM row write→ host→device DMA of a layer's INT8 (delta) stream
+    write latency  → bytes / dma_bw  (+ fixed launch latency)
+    compute latency→ per-layer roofline max(FLOPs/peak, bytes/hbm_bw)
+
+The wave logic is the paper's: compute layer-by-layer; whenever slots free
+up, Algorithm 1 (`repro.core.replication.plan_writes`) decides which coming
+layers to install, replicated if they are compute-bound relative to the next
+wave's install latency WL.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.replication import LayerCost, plan_writes
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuLinkModel:
+    """v5e-class chip for planning purposes."""
+
+    peak_flops: float = 197e12          # bf16 (INT8 via MXU ≈ 2× — conservative)
+    hbm_bw: float = 819e9
+    dma_bw: float = 100e9               # host→device per chip (PCIe/offload)
+    dma_latency_s: float = 50e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamLayer:
+    name: str
+    bytes_int8: int
+    flops_per_token: float
+    tokens: int
+
+    def compute_s(self, link: TpuLinkModel, replication: int = 1) -> float:
+        flops = self.flops_per_token * self.tokens / max(replication, 1)
+        return max(flops / link.peak_flops, self.bytes_int8 / link.hbm_bw)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    kind: str              # 'install' | 'compute'
+    layer: int
+    t_start: float
+    t_end: float
+    slots: int
+    replication: int = 1
+
+
+@dataclasses.dataclass
+class StreamPlan:
+    layers: Sequence[StreamLayer]
+    events: List[StreamEvent]
+    slot_bytes: int
+    n_slots: int
+    makespan_s: float
+    serial_makespan_s: float     # naive: install → compute → install …
+
+    @property
+    def overlap_speedup(self) -> float:
+        return self.serial_makespan_s / self.makespan_s
+
+    def installs(self) -> List[StreamEvent]:
+        return [e for e in self.events if e.kind == "install"]
+
+
+def build_stream_plan(
+    layers: Sequence[StreamLayer],
+    hbm_weight_budget_bytes: int,
+    link: TpuLinkModel = TpuLinkModel(),
+    slot_bytes: Optional[int] = None,
+    replication: bool = True,
+) -> StreamPlan:
+    if slot_bytes is None:
+        slot_bytes = max(l.bytes_int8 for l in layers)
+        slot_bytes = max(slot_bytes // 4, 1)  # 4 sub-slots of the biggest layer
+    n_slots = max(hbm_weight_budget_bytes // slot_bytes, 1)
+
+    def slots_of(l: StreamLayer) -> int:
+        return max(math.ceil(l.bytes_int8 / slot_bytes), 1)
+
+    if max(slots_of(l) for l in layers) > n_slots:
+        raise ValueError("arena too small for the largest layer; "
+                         "increase budget or shard the layer")
+
+    secs = 1e6  # plan in microseconds to keep numbers O(1)
+    costs = [
+        LayerCost(
+            base_rows=slots_of(l),
+            compute_cycles=l.compute_s(link) * secs,
+            max_replication=8 if replication else 1,
+            write_dma_cycles=(l.bytes_int8 / link.dma_bw + link.dma_latency_s) * secs,
+        )
+        for l in layers
+    ]
+
+    def wl(idx: int) -> float:
+        if idx >= len(layers):
+            return float("inf")
+        return costs[idx].write_dma_cycles
+
+    events: List[StreamEvent] = []
+    free = n_slots
+    dma_free = 0.0
+    ready = {}
+    slots_held = {}
+    repl = {}
+    w = 0
+    t = 0.0
+
+    def issue(now: float) -> None:
+        nonlocal w, free, dma_free
+        while w < len(layers) and free > 0:
+            items = plan_writes(free, w, costs, wl, replication_enabled=replication)
+            if not items:
+                return
+            progressed = False
+            for it in items:
+                if it.fraction < 1.0:
+                    return  # partial installs not supported: slot granularity
+                l = layers[it.layer_idx]
+                start = max(now, dma_free)
+                dur = (l.bytes_int8 * it.replication / link.dma_bw
+                       + link.dma_latency_s)
+                end = start + dur
+                dma_free = end
+                free -= it.rows
+                ready[it.layer_idx] = end
+                slots_held[it.layer_idx] = it.rows
+                repl[it.layer_idx] = it.replication
+                events.append(StreamEvent("install", it.layer_idx, start, end,
+                                          it.rows, it.replication))
+                w = it.layer_idx + 1
+                progressed = True
+            if not progressed:
+                return
+
+    issue(0.0)
+    for i, l in enumerate(layers):
+        if i not in ready:
+            issue(t)
+        if i not in ready:
+            raise RuntimeError(f"streaming deadlock at layer {i}")
+        start = max(t, ready[i])
+        dur = l.compute_s(link, repl.get(i, 1))
+        end = start + dur
+        events.append(StreamEvent("compute", i, start, end, slots_held[i],
+                                  repl.get(i, 1)))
+        free += slots_held[i]
+        t = end
+        issue(t)
+
+    makespan = t
+    # Naive (Fig 7) reference: strictly serial install → compute.
+    serial = 0.0
+    for l in layers:
+        serial += l.bytes_int8 / link.dma_bw + link.dma_latency_s
+        serial += l.compute_s(link)
+    return StreamPlan(layers, events, slot_bytes, n_slots, makespan, serial)

@@ -1,0 +1,34 @@
+"""Crossbar numerics: INT8 quantization, 2-bit ReRAM cell packing, mapping.
+
+This package is the numerical substrate shared by the faithful simulator
+(`repro.sim`), the weight-reuse optimization (`repro.core.weight_reuse`) and
+the TPU-native streaming path (`repro.streaming`).
+"""
+from repro.xbar.quant import (
+    QuantParams,
+    quantize,
+    dequantize,
+    quantize_tensor,
+    shift_weights,
+    dot_int8,
+)
+from repro.xbar.cells import (
+    CELL_BITS,
+    CELLS_PER_WEIGHT,
+    LEVELS,
+    pack_cells,
+    unpack_cells,
+    pulse_count,
+    skip_ratio,
+    cell_similarity,
+)
+from repro.xbar.mapping import CrossbarSpec, LayerMapping, map_layer
+
+__all__ = [
+    "QuantParams", "quantize", "dequantize", "quantize_tensor",
+    "shift_weights", "dot_int8",
+    "CELL_BITS", "CELLS_PER_WEIGHT", "LEVELS",
+    "pack_cells", "unpack_cells", "pulse_count", "skip_ratio",
+    "cell_similarity",
+    "CrossbarSpec", "LayerMapping", "map_layer",
+]

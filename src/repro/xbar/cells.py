@@ -1,0 +1,96 @@
+"""2-bit multi-level ReRAM cell arithmetic (paper §II-B, §V-C).
+
+Each INT8 weight code occupies ``CELLS_PER_WEIGHT = 4`` cells of
+``CELL_BITS = 2`` bits (levels 0..3).  Cell 0 holds the least-significant
+pair, cell 3 the most-significant pair (the paper's "4th cell").
+
+Updating a cell from level a to level b costs ``|a - b|`` programming pulses
+(incremental SET/RESET pulse trains); equal levels are *skipped* entirely.
+The write latency of a row-phase is set by the slowest cell in the row
+(max |Δ| over the row for that polarity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CELL_BITS = 2
+CELLS_PER_WEIGHT = 8 // CELL_BITS  # = 4
+LEVELS = 1 << CELL_BITS            # = 4
+
+
+def pack_cells(code: jax.Array) -> jax.Array:
+    """uint8 codes (...,) -> cell levels (..., 4), cell 0 = LSBs."""
+    c = code.astype(jnp.int32)
+    shifts = jnp.arange(CELLS_PER_WEIGHT) * CELL_BITS  # [0, 2, 4, 6]
+    return (c[..., None] >> shifts) & (LEVELS - 1)
+
+
+def unpack_cells(cells: jax.Array) -> jax.Array:
+    """Cell levels (..., 4) -> uint8 codes (...,)."""
+    shifts = jnp.arange(CELLS_PER_WEIGHT) * CELL_BITS
+    return jnp.sum(cells.astype(jnp.int32) << shifts, axis=-1).astype(jnp.uint8)
+
+
+def cell_deltas(old_code: jax.Array, new_code: jax.Array) -> jax.Array:
+    """Signed per-cell level deltas (..., 4) when overwriting old with new."""
+    return pack_cells(new_code) - pack_cells(old_code)
+
+
+def pulse_count(old_code: jax.Array, new_code: jax.Array) -> jax.Array:
+    """Total programming pulses to overwrite ``old_code`` with ``new_code``.
+
+    This is the paper's "ReRAM writing activity" metric (Fig 13).
+    """
+    return jnp.sum(jnp.abs(cell_deltas(old_code, new_code)))
+
+
+def pulse_count_per_cell(old_code: jax.Array, new_code: jax.Array) -> jax.Array:
+    """Per-cell-index pulse totals, shape (4,) — MSB cells are index 2, 3."""
+    d = jnp.abs(cell_deltas(old_code, new_code))
+    return jnp.sum(d.reshape(-1, CELLS_PER_WEIGHT), axis=0)
+
+
+def skip_ratio(old_code: jax.Array, new_code: jax.Array) -> jax.Array:
+    """Fraction of cells whose level is unchanged (skippable writes)."""
+    d = cell_deltas(old_code, new_code)
+    return jnp.mean((d == 0).astype(jnp.float32))
+
+
+def skip_ratio_per_cell(old_code: jax.Array, new_code: jax.Array) -> jax.Array:
+    d = cell_deltas(old_code, new_code)
+    return jnp.mean((d == 0).astype(jnp.float32).reshape(-1, CELLS_PER_WEIGHT), axis=0)
+
+
+def cell_value_histogram(code: jax.Array, cell: int) -> jax.Array:
+    """P_i(k) of the paper's Eq. 3: distribution of levels in cell ``cell``."""
+    levels = pack_cells(code)[..., cell].reshape(-1)
+    counts = jnp.sum(
+        (levels[:, None] == jnp.arange(LEVELS)[None, :]).astype(jnp.float32), axis=0
+    )
+    return counts / levels.shape[0]
+
+
+def cell_similarity(code_x: jax.Array, code_y: jax.Array, cell: int) -> jax.Array:
+    """Paper Eq. 3: Sim(X, Y, i) = Σ_k P_i_X(k) · P_i_Y(k).
+
+    Probability that cell ``cell`` keeps its value when a random weight of
+    layer Y overwrites a random weight of layer X in the same crossbar cell.
+    """
+    px = cell_value_histogram(code_x, cell)
+    py = cell_value_histogram(code_y, cell)
+    return jnp.sum(px * py)
+
+
+def row_phase_pulses(old_code: jax.Array, new_code: jax.Array) -> jax.Array:
+    """Max pulses per polarity for a crossbar *row* of weights.
+
+    ``old_code``/``new_code``: (row_weights,) uint8.  Row write latency is
+    2 phases; each phase is bounded by the slowest cell needing that polarity
+    (increase phase: max positive Δ; decrease phase: max negative Δ).
+    Returns (inc_pulses, dec_pulses).
+    """
+    d = cell_deltas(old_code, new_code)
+    inc = jnp.max(jnp.maximum(d, 0))
+    dec = jnp.max(jnp.maximum(-d, 0))
+    return jnp.stack([inc, dec])

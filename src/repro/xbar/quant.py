@@ -1,0 +1,118 @@
+"""INT8 uniform quantization with zero-point compensation (paper Eq. 6-7).
+
+The paper stores weights as unsigned INT8 codes ``w_q = round(q_w * w_f) - zp_w``
+laid out over four 2-bit ReRAM cells.  The §V-C re-encoding adds an ``Offset``
+to every code of a layer so the code distribution is centered on a common
+``Center``; the *same* offset is subtracted from the zero point used at
+de-quantization, so the floating-point dot product is bit-exact unchanged
+(up to clipping of codes that leave [0, 255]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+UINT_MAX = 255
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Uniform affine quantization parameters for one tensor.
+
+    code = clip(round(w / scale) + zero_point, 0, 255)
+    w̃   = (code - zero_point) * scale
+    """
+
+    scale: jax.Array      # f32 scalar (or per-channel vector)
+    zero_point: jax.Array  # f32, same shape as scale
+
+    def shifted(self, offset: jax.Array) -> "QuantParams":
+        """Compensate a code-domain shift by ``offset`` (Eq. 7's zp_w - Offset)."""
+        return QuantParams(self.scale, self.zero_point + offset)
+
+
+def quantize_tensor(w: jax.Array, axis=None) -> Tuple[jax.Array, QuantParams]:
+    """Symmetric-range uniform quantization of ``w`` to uint8 codes.
+
+    ``axis``: None for per-tensor, or an int/tuple for per-channel params
+    (reduction is performed over the *other* axes).
+    """
+    if axis is None:
+        lo = jnp.min(w)
+        hi = jnp.max(w)
+    else:
+        axes = tuple(i for i in range(w.ndim) if i != axis)
+        lo = jnp.min(w, axis=axes, keepdims=True)
+        hi = jnp.max(w, axis=axes, keepdims=True)
+    # Guard degenerate range.
+    scale = jnp.maximum(hi - lo, 1e-8) / UINT_MAX
+    zero_point = -lo / scale  # code for w == 0.0 ... (affine: code = w/scale + zp)
+    code = jnp.clip(jnp.round(w / scale + zero_point), 0, UINT_MAX).astype(jnp.uint8)
+    return code, QuantParams(scale=scale, zero_point=zero_point)
+
+
+def quantize(w: jax.Array, params: QuantParams) -> jax.Array:
+    return jnp.clip(
+        jnp.round(w / params.scale + params.zero_point), 0, UINT_MAX
+    ).astype(jnp.uint8)
+
+
+def dequantize(code: jax.Array, params: QuantParams) -> jax.Array:
+    return (code.astype(jnp.float32) - params.zero_point) * params.scale
+
+
+def shift_weights(code: jax.Array, center: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Paper Eq. 4-5: shift all codes of a layer so their mean lands on ``center``.
+
+    Returns (new_code, offset).  Codes are clipped to [0, 255]; the caller is
+    responsible for compensating ``offset`` in the zero point (Eq. 7) and for
+    checking the clip rate (accuracy proxy).
+    """
+    offset = jnp.round(center - jnp.mean(code.astype(jnp.float32)))
+    new_code = jnp.clip(code.astype(jnp.int32) + offset.astype(jnp.int32), 0, UINT_MAX)
+    return new_code.astype(jnp.uint8), offset
+
+
+def clip_rate(code: jax.Array, offset: jax.Array) -> jax.Array:
+    """Fraction of codes that saturate when shifted by ``offset`` (accuracy proxy)."""
+    shifted = code.astype(jnp.int32) + offset.astype(jnp.int32)
+    return jnp.mean(((shifted < 0) | (shifted > UINT_MAX)).astype(jnp.float32))
+
+
+def dot_int8(
+    x_code: jax.Array,
+    w_code: jax.Array,
+    x_params: QuantParams,
+    w_params: QuantParams,
+    bias: jax.Array | None = None,
+) -> jax.Array:
+    """De-quantized dot product (paper Eq. 7), pure-jnp reference.
+
+    ``x_code``: (..., K) uint8 activations; ``w_code``: (K, N) uint8 weights.
+    Computes yf = sum_k (x - zp_x)*sx * (w - zp_w)*sw + b using integer
+    accumulation plus the standard zero-point correction terms — exactly the
+    arithmetic a TPU-native INT8 path performs, and the identity under which
+    the §V-C weight shift is free (Offset folded into zp_w).
+    """
+    xi = x_code.astype(jnp.int32)
+    wi = w_code.astype(jnp.int32)
+    acc = jnp.matmul(xi, wi, preferred_element_type=jnp.int32)
+    k = x_code.shape[-1]
+    # Zero-point corrections: (x - zpx)·(w - zpw) = xw - zpw·Σx - zpx·Σw + K·zpx·zpw
+    sum_x = jnp.sum(xi, axis=-1, keepdims=True).astype(jnp.float32)
+    sum_w = jnp.sum(wi, axis=0, keepdims=True).astype(jnp.float32)
+    zpx = x_params.zero_point
+    zpw = w_params.zero_point
+    y = (
+        acc.astype(jnp.float32)
+        - zpw * sum_x
+        - zpx * sum_w
+        + k * zpx * zpw
+    ) * (x_params.scale * w_params.scale)
+    if bias is not None:
+        y = y + bias
+    return y

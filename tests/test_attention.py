@@ -1,0 +1,126 @@
+"""Attention paths: flash custom-VJP vs naive oracle, masks, caches."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.nn.attention import _mask, _softmax_attend, chunked_attention
+from repro.nn.flash import flash_chunked
+
+
+def naive(q, k, v, causal, prefix_len=0, window=0):
+    """q (B,S,Hkv,G,D), k/v (B,S,Hkv,D) oracle."""
+    B, S, Hkv, G, D = q.shape
+    pos = jnp.arange(S)
+    mask = _mask(pos, pos, causal=causal, window=window, prefix_len=prefix_len)
+    return _softmax_attend(q, k, v, mask[None], 0.0)
+
+
+def rand_qkv(key, B=2, S=300, Hkv=2, G=2, D=16):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv, G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal,prefix", [(True, 0), (False, 0), (True, 7)])
+def test_flash_forward_matches_naive(causal, prefix):
+    q, k, v = rand_qkv(jax.random.PRNGKey(0))
+    out = chunked_attention(q, k, v, causal=causal, prefix_len=prefix,
+                            q_chunk=64, kv_chunk=128)
+    ref = naive(q, k, v, causal, prefix)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_gradients_match_naive():
+    q, k, v = rand_qkv(jax.random.PRNGKey(1), S=200)
+
+    def loss_flash(q, k, v):
+        o = chunked_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_naive(q, k, v):
+        return jnp.sum(jnp.sin(naive(q, k, v, True)))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-4)
+
+
+def test_banded_equals_masked_full():
+    q, k, v = rand_qkv(jax.random.PRNGKey(2), S=256)
+    w = 48
+    out = chunked_attention(q, k, v, causal=True, window=w, q_chunk=64)
+    ref = naive(q, k, v, True, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_unrolled_probe_matches_flash():
+    q, k, v = rand_qkv(jax.random.PRNGKey(3), S=160)
+    a = chunked_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+    b = chunked_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64,
+                          unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "gemma-7b", "hymba-1.5b",
+                                  "deepseek-v2-lite-16b"])
+def test_prefill_decode_consistency(arch):
+    """Prefill(S) then one decode step must equal forward over S+1 tokens."""
+    from repro.nn.model import decode_step, forward, init_params, prefill
+    cfg = get_config(arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 24
+    key = jax.random.PRNGKey(9)
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab).astype(jnp.int32)
+    batch = {"tokens": toks[:, :S]}
+    prefix = 0
+    if cfg.input_mode == "prefix_vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.prefix_len, cfg.d_model))
+        prefix = cfg.prefix_len
+    logits_p, caches = prefill(params, batch, cfg, cache_len=S + 8 + prefix)
+    logits_d, _ = decode_step(params, toks[:, S], caches,
+                              jnp.int32(S + prefix), cfg)
+    # Reference: full forward over S+1 tokens, take last.
+    batch2 = dict(batch, tokens=toks)
+    ref, _, _ = forward(params, batch2, cfg, last_only=True)
+    # bf16 end-to-end: prefill (chunked f32-accum) vs decode (cached) paths
+    # differ in summation order; tolerance sized to bf16 noise, not bugs.
+    np.testing.assert_allclose(np.asarray(logits_d, np.float32),
+                               np.asarray(ref[:, 0], np.float32),
+                               rtol=0.15, atol=0.25)
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "qwen3-32b"])
+def test_int8_kv_cache_decode_close_to_bf16(arch):
+    """§Perf iteration 9: int8 KV cache (paper's INT8 cells applied to the
+    KV crossbar) must track the bf16 cache within quantization noise."""
+    import dataclasses
+    from repro.nn.model import decode_step, init_params, prefill
+    cfg8 = dataclasses.replace(get_config(arch, smoke=True),
+                               kv_cache_dtype="int8")
+    cfg16 = get_config(arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg16)
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S + 1), 0,
+                              cfg16.vocab).astype(jnp.int32)
+    batch = {"tokens": toks[:, :S]}
+    outs = {}
+    for name, cfg in (("int8", cfg8), ("bf16", cfg16)):
+        _, cc = prefill(params, batch, cfg, cache_len=S + 8)
+        ld, _ = decode_step(params, toks[:, S], cc, jnp.int32(S), cfg)
+        outs[name] = np.asarray(ld, np.float32)
+    rel = np.max(np.abs(outs["int8"] - outs["bf16"])) / np.max(
+        np.abs(outs["bf16"]))
+    assert rel < 0.08, rel

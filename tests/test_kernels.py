@@ -1,0 +1,71 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
+shape/dtype sweeps as required for every kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.crossbar_mvm.ops import crossbar_mvm
+from repro.kernels.crossbar_mvm.ref import crossbar_mvm_ref
+from repro.kernels.delta_apply.ops import apply_delta
+from repro.kernels.delta_apply.ref import delta_apply_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.pulse_count.ops import pulse_count
+from repro.kernels.pulse_count.ref import pulse_count_ref
+
+
+@pytest.mark.parametrize("n", [17, 4096, 70_001])
+def test_delta_apply_sweep(n):
+    rng = np.random.default_rng(n)
+    old = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    new = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    delta = ((new.astype(jnp.int32) - old.astype(jnp.int32)) % 256).astype(jnp.uint8)
+    out = apply_delta(old, delta)
+    assert (out == delta_apply_ref(old, delta)).all()
+    assert (out == new).all()
+
+
+@pytest.mark.parametrize("n", [100, 33_000])
+def test_pulse_count_sweep(n):
+    rng = np.random.default_rng(n)
+    old = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    new = jnp.asarray(rng.integers(0, 256, n, dtype=np.uint8))
+    p, s = pulse_count(old, new)
+    pr, sr = pulse_count_ref(old, new)
+    assert int(p) == int(pr) and int(s) == int(sr)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 64, 8), (70, 300, 90), (128, 128, 128),
+                                   (200, 1000, 64)])
+def test_crossbar_mvm_sweep(m, k, n):
+    rng = np.random.default_rng(m * k + n)
+    x = jnp.asarray(rng.integers(0, 256, (m, k), dtype=np.uint8))
+    w = jnp.asarray(rng.integers(0, 256, (k, n), dtype=np.uint8))
+    zx = jnp.float32(rng.uniform(0, 255))
+    zw = jnp.float32(rng.uniform(0, 255))
+    sc = jnp.float32(10 ** rng.uniform(-5, -2))
+    a = crossbar_mvm(x, w, zx, zw, sc)
+    b = crossbar_mvm_ref(x, w, zx, zw, sc)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,d,causal", [(128, 32, True), (200, 64, False),
+                                        (256, 16, True)])
+def test_flash_attention_kernel_sweep(s, d, causal, dtype):
+    key = jax.random.PRNGKey(s + d)
+    B, H = 2, 3
+    q = jax.random.normal(key, (B, s, H, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, s, H, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, s, H, d), dtype)
+    o = flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, s, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, s, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, s, d)
+    r = flash_attention_ref(qt, kt, vt, causal=causal)
+    r = r.reshape(B, H, s, d).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)

@@ -1,0 +1,68 @@
+"""Algorithm 1 (Adaptive Weight Replication) invariants."""
+from repro.core.replication import LayerCost, plan_writes
+
+
+def mk(rows, cycles, dma=1000.0, maxrep=64):
+    return LayerCost(base_rows=rows, compute_cycles=cycles,
+                     max_replication=maxrep, write_dma_cycles=dma)
+
+
+WL = lambda idx: 768_000.0
+
+
+def total_rows(items, costs):
+    return sum(i.rows for i in items)
+
+
+def test_partial_write_when_too_small():
+    costs = [mk(100, 10_000)]
+    items = plan_writes(40, 0, costs, WL)
+    assert len(items) == 1 and items[0].fraction == 0.4
+    assert items[0].replication == 1 and items[0].rows == 40
+
+
+def test_single_layer_replicates_into_free_rows():
+    costs = [mk(10, 5_000_000), mk(1000, 10_000)]
+    items = plan_writes(90, 0, costs, WL)
+    assert items[0].layer_idx == 0
+    # replicates until compute (5e6/f) drops under WL (768k) → f = 7, not 9:
+    # past the WL inflection more replicas only cost writes (paper §V-B).
+    assert items[0].replication == 7
+
+
+def test_rows_never_exceed_budget():
+    costs = [mk(7, 900_000), mk(11, 1_200_000), mk(5, 50_000), mk(9, 2_000_000)]
+    for free in (10, 23, 40, 100, 300):
+        items = plan_writes(free, 0, costs, WL)
+        assert total_rows(items, costs) <= free
+
+
+def test_fc_like_layers_not_replicated():
+    """BERT regime: compute ≪ WL → zero replication (paper Fig 14)."""
+    costs = [mk(37, 12_288, dma=40_000) for _ in range(10)]
+    items = plan_writes(576, 0, costs, WL)
+    assert all(i.replication == 1 for i in items)
+
+
+def test_compute_bound_layers_do_replicate():
+    costs = [mk(2, 5_000_000) for _ in range(4)] + [mk(2, 1_000)]
+    items = plan_writes(576, 0, costs, WL)
+    assert any(i.replication > 1 for i in items)
+
+
+def test_tail_wave_gated_by_dma_cost():
+    # no following writes: replicate while marginal saving > replica DMA
+    costs = [mk(10, 1_000, dma=100_000)]
+    items = plan_writes(576, 0, costs, lambda i: 0.0)
+    assert items[0].replication == 1  # saving 500 < dma 100k
+
+    costs = [mk(10, 10_000_000, dma=1_000)]
+    items = plan_writes(576, 0, costs, lambda i: 0.0)
+    assert items[0].replication > 1
+
+
+def test_ordering_consecutive_from_head():
+    costs = [mk(50, 100_000) for _ in range(8)]
+    items = plan_writes(576, 2, costs, WL)
+    idxs = [i.layer_idx for i in items]
+    assert idxs == sorted(idxs) and idxs[0] == 2

@@ -1,0 +1,112 @@
+"""ARAS scheduler + event simulator: structural invariants and paper claims."""
+import numpy as np
+import pytest
+
+from repro.core.resources import AcceleratorConfig
+from repro.core.scheduler import build_schedule, validate_schedule
+from repro.models.paper_nets import build_net, synth_layer_codes
+from repro.sim.aras import ArasSimConfig, segment_graph, simulate_aras, upper_bound_cycles
+from repro.sim.tpu import simulate_tpu
+
+
+@pytest.fixture(scope="module")
+def resnet():
+    g = build_net("resnet50")
+    codes = synth_layer_codes(g, max_samples=50_000)
+    return g, codes
+
+
+@pytest.fixture(scope="module")
+def bert():
+    g = build_net("bert_base")
+    codes = synth_layer_codes(g, max_samples=50_000)
+    return g, codes
+
+
+def test_segments_fit_pool(resnet):
+    g, _ = resnet
+    accel = AcceleratorConfig()
+    for s in segment_graph(g, accel):
+        assert s.base_rows <= accel.total_rows
+
+
+def test_schedule_is_valid(resnet):
+    g, codes = resnet
+    sched = build_schedule(g, codes, ArasSimConfig.variant("BRW"))
+    errors = validate_schedule(sched)
+    assert errors == [], errors
+
+
+def test_overlap_beats_naive(resnet):
+    g, codes = resnet
+    naive = simulate_aras(g, codes, ArasSimConfig.variant("naive"))
+    base = simulate_aras(g, codes, ArasSimConfig.variant("baseline"))
+    assert base.makespan_s < naive.makespan_s
+
+
+def test_replication_speeds_up_cnn_not_bert(resnet, bert):
+    for (g, codes), expect_gain in ((resnet, True), (bert, False)):
+        base = simulate_aras(g, codes, ArasSimConfig.variant("baseline"))
+        br = simulate_aras(g, codes, ArasSimConfig.variant("BR"))
+        if expect_gain:
+            assert br.makespan_s < base.makespan_s * 0.75
+        else:
+            assert br.makespan_s == pytest.approx(base.makespan_s, rel=1e-6)
+
+
+def test_weight_reuse_cuts_pulses_not_time(resnet):
+    g, codes = resnet
+    br = simulate_aras(g, codes, ArasSimConfig.variant("BR"))
+    brw = simulate_aras(g, codes, ArasSimConfig.variant("BRW"))
+    assert brw.total_pulses < br.total_pulses * 0.95
+    assert brw.makespan_s == pytest.approx(br.makespan_s, rel=1e-6)
+
+
+def test_upper_bound_is_a_bound(resnet, bert):
+    for g, codes in (resnet, bert):
+        ub = upper_bound_cycles(g, AcceleratorConfig()) / 1e9
+        for v in ("baseline", "BRW"):
+            r = simulate_aras(g, codes, ArasSimConfig.variant(v))
+            assert r.makespan_s >= ub * 0.999
+
+
+def test_determinism(resnet):
+    g, codes = resnet
+    a = simulate_aras(g, codes, ArasSimConfig.variant("BRW"))
+    b = simulate_aras(g, codes, ArasSimConfig.variant("BRW"))
+    assert a.makespan_s == b.makespan_s
+    assert a.total_pulses == b.total_pulses
+
+
+def test_energy_breakdown_positive(bert):
+    g, codes = bert
+    r = simulate_aras(g, codes, ArasSimConfig.variant("BRW"))
+    for k, v in r.energy.items():
+        assert v >= 0.0, k
+    assert r.energy["total"] == pytest.approx(
+        sum(v for k, v in r.energy.items() if k != "total"))
+
+
+def test_paper_claim_bands(resnet, bert):
+    """Reproduction bands: ResNet speedup ≈ 2.2× (paper), BERT ≈ 1.0×;
+    BRW pulse ratio ≈ 0.83; energy ratio ≈ 0.72 (±0.12 tolerance bands)."""
+    g, codes = resnet
+    base = simulate_aras(g, codes, ArasSimConfig.variant("baseline"))
+    brw = simulate_aras(g, codes, ArasSimConfig.variant("BRW"))
+    speedup = base.makespan_s / brw.makespan_s
+    assert 1.7 <= speedup <= 2.7
+    assert 0.70 <= brw.total_pulses / base.total_pulses <= 0.95
+    assert 0.6 <= brw.total_energy_j / base.total_energy_j <= 0.88
+
+    g, codes = bert
+    base = simulate_aras(g, codes, ArasSimConfig.variant("baseline"))
+    brw = simulate_aras(g, codes, ArasSimConfig.variant("BRW"))
+    assert base.makespan_s / brw.makespan_s == pytest.approx(1.0, abs=0.05)
+
+
+def test_tpu_comparison_direction(resnet):
+    g, codes = resnet
+    brw = simulate_aras(g, codes, ArasSimConfig.variant("BRW"))
+    tpu = simulate_tpu(g)
+    assert tpu.makespan_s / brw.makespan_s > 1.0   # paper: ARAS faster
+    assert brw.total_energy_j / tpu.total_energy_j < 1.0  # and cheaper

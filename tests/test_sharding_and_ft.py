@@ -1,0 +1,107 @@
+"""Sharding spec trees, gradient compression, straggler/watchdog utilities."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import ARCHS, get_config
+from repro.ft import StepTimer, Watchdog
+from repro.launch.steps import (
+    abstract_caches,
+    abstract_params,
+    cache_shardings,
+    param_shardings,
+)
+from repro.parallel.compression import (
+    _dequantize_blockwise,
+    _quantize_blockwise,
+    compression_ratio_bytes,
+)
+from repro.parallel.sharding import use_mesh
+
+
+def _mesh11():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_shardings_match_param_tree(arch):
+    cfg = get_config(arch, smoke=True)
+    mesh = _mesh11()
+    with use_mesh(mesh):
+        ap = abstract_params(cfg)
+        psh = param_shardings(cfg, mesh)
+    # same tree structure → zip succeeds, and every leaf has a sharding
+    leaves_p = jax.tree_util.tree_leaves(ap)
+    leaves_s = jax.tree_util.tree_leaves(
+        psh, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(leaves_p) == len(leaves_s)
+    for p, s in zip(leaves_p, leaves_s):
+        assert len(s.spec) <= p.ndim, (p.shape, s.spec)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "hymba-1.5b", "xlstm-350m",
+                                  "deepseek-v2-lite-16b"])
+def test_cache_shardings_match_cache_tree(arch):
+    cfg = get_config(arch, smoke=True)
+    mesh = _mesh11()
+    with use_mesh(mesh):
+        ac = abstract_caches(cfg, batch=2, cache_len=32)
+        csh = cache_shardings(cfg, mesh)
+    lp = jax.tree_util.tree_leaves(ac)
+    ls = jax.tree_util.tree_leaves(csh, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(lp) == len(ls)
+
+
+def test_blockwise_quant_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3.0, (5000,)).astype(np.float32))
+    q, s = _quantize_blockwise(x)
+    out = _dequantize_blockwise(q, s, x.shape, x.size)
+    # error bounded by scale/2 per block
+    max_scale = float(jnp.max(s))
+    assert float(jnp.max(jnp.abs(out - x))) <= max_scale * 0.5 + 1e-6
+
+
+def test_error_feedback_is_lossless_over_time():
+    """Σ_t dequant_t = Σ_t g_t exactly in the limit: the residual is carried,
+    so cumulative compressed updates track cumulative gradients."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(0, 1, (4096,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    applied = jnp.zeros_like(g)
+    for _ in range(30):
+        total = g + err
+        q, s = _quantize_blockwise(total)
+        deq = _dequantize_blockwise(q, s, total.shape, total.size)
+        err = total - deq
+        applied = applied + deq
+    drift = float(jnp.max(jnp.abs(applied / 30.0 - g)))
+    assert drift < 0.05
+
+
+def test_compression_ratio_is_4x_ish():
+    g = {"a": jnp.zeros((1 << 20,))}
+    raw, comp = compression_ratio_bytes(g)
+    assert raw / comp > 3.5
+
+
+def test_straggler_flagging():
+    t = StepTimer(ewma_alpha=1.0, threshold=1.5)
+    t.observe({"h0": 1.0, "h1": 1.0, "h2": 1.0, "h3": 5.0})
+    rep = t.report(1)
+    assert rep.flagged and "h3" in rep.slowest
+
+
+def test_watchdog_fires_and_cancels():
+    fired = []
+    wd = Watchdog(0.15, on_timeout=lambda s: fired.append(s))
+    with wd.armed(1):
+        time.sleep(0.01)
+    assert not fired
+    with wd.armed(2):
+        time.sleep(0.35)
+    assert fired == [2]

@@ -1,0 +1,77 @@
+"""§V-C Adaptive Partial Weight Reuse properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.weight_reuse import (
+    CENTERS,
+    ERASED_HIST,
+    cell_hist,
+    encode_network,
+    expected_pulses_per_weight,
+    expected_skip_per_cell,
+    pulse_matrix,
+)
+
+
+def bell_codes(rng, mean, sigma, n=20000):
+    return np.clip(rng.normal(mean, sigma, n), 0, 255).astype(np.uint8)
+
+
+def test_centering_improves_msb_skip_and_pulses():
+    rng = np.random.default_rng(0)
+    layers = [("a", bell_codes(rng, 110, 20)), ("b", bell_codes(rng, 150, 22)),
+              ("c", bell_codes(rng, 135, 18))]
+    off_encs, _ = encode_network(layers, enabled=False)
+    on_encs, center = encode_network(layers, enabled=True)
+    assert center in CENTERS
+
+    def stats(encs):
+        skips, pulses = [], []
+        for a, b in zip(encs[:-1], encs[1:]):
+            skips.append(expected_skip_per_cell(a.hist, b.hist)[2:].sum())
+            pulses.append(expected_pulses_per_weight(a.hist, b.hist))
+        return np.mean(skips), np.mean(pulses)
+
+    s_off, p_off = stats(off_encs)
+    s_on, p_on = stats(on_encs)
+    assert s_on > s_off           # MSB cells agree more often
+    assert p_on < p_off           # fewer programming pulses
+
+
+def test_clip_guard_respected():
+    rng = np.random.default_rng(1)
+    layers = [("a", bell_codes(rng, 128, 15)), ("b", bell_codes(rng, 128, 15))]
+    encs, center = encode_network(layers, enabled=True, max_clip_rate=1e-3)
+    assert all(e.clip_rate <= 1e-3 for e in encs)
+
+
+def test_first_layer_never_shifted():
+    rng = np.random.default_rng(2)
+    layers = [("a", bell_codes(rng, 100, 10)), ("b", bell_codes(rng, 170, 10))]
+    encs, _ = encode_network(layers, enabled=True)
+    assert encs[0].offset == 0
+
+
+def test_pulse_matrix_shape_and_erased_row():
+    rng = np.random.default_rng(3)
+    layers = [("a", bell_codes(rng, 120, 25)), ("b", bell_codes(rng, 140, 25))]
+    encs, _ = encode_network(layers, enabled=True)
+    m = pulse_matrix(encs)
+    assert m.shape == (3, 2)
+    # writing over erased (level-0) cells costs the code's own level sum
+    h = encs[0].hist
+    exp = expected_pulses_per_weight(ERASED_HIST, h)
+    assert np.isclose(m[0, 0], exp)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_expected_pulses_nonnegative_and_bounded(seed):
+    rng = np.random.default_rng(seed)
+    a = cell_hist(rng.integers(0, 256, 4096).astype(np.uint8))
+    b = cell_hist(rng.integers(0, 256, 4096).astype(np.uint8))
+    p = expected_pulses_per_weight(a, b)
+    assert 0.0 <= p <= 3.0 * 4  # ≤ max |Δ| per cell × 4 cells
+    # |Δ| is symmetric → expectation is symmetric in (old, new)
+    assert np.isclose(expected_pulses_per_weight(a, b),
+                      expected_pulses_per_weight(b, a))

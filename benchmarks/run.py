@@ -30,9 +30,10 @@ def main() -> None:
     tab4_endurance.main()
 
     if "--fast" not in sys.argv:
-        from benchmarks import streaming_bench
+        from benchmarks import serving_bench, streaming_bench
 
         streaming_bench.main()
+        serving_bench.main()
 
     print(f"\ntotal benchmark wall time: {time.perf_counter() - t0:.1f}s")
 

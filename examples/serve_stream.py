@@ -1,6 +1,13 @@
-"""Example: serve a model whose weights exceed the device weight arena,
-streaming layers ARAS-style (delta-encoded INT8 installs overlapped with
-compute), and compare against the resident full model.
+"""Example: ARAS-style serving when weights exceed the device arena.
+
+Part 1 streams a single model through the layer-streaming executor
+(delta-encoded INT8 installs overlapped with compute) and checks the result
+against the resident full model.
+
+Part 2 serves two tenants — a base model and a fine-tuned variant — through
+the continuous-batching `ServingEngine` on a weight arena too small to hold
+both, so every tenant switch delta-installs layer codes §V-C-style across
+tenants.
 
     PYTHONPATH=src python examples/serve_stream.py
 """
@@ -12,9 +19,12 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.nn.model import forward, init_params
+from repro.serving import EngineModel, SchedulerConfig, ServingEngine, format_summary
+from repro.serving.variants import perturbed_variant
 from repro.streaming.executor import StreamingExecutor
 
 
@@ -24,7 +34,7 @@ def main() -> None:
     params = init_params(jax.random.PRNGKey(0), cfg)
     batch = {"tokens": jnp.ones((2, 24), jnp.int32)}
 
-    # 6 layers, 3 arena slots → every slot is overwritten twice per pass.
+    # --- 1. layer streaming: 6 layers through 3 arena slots -------------
     ex = StreamingExecutor(params, cfg, arena_slots=3, reuse=True,
                            plan_tokens=2 * 24)
     logits, m = ex.forward(batch)
@@ -37,6 +47,21 @@ def main() -> None:
           f"(skip ratio {m['mean_skip']:.1%}, center={int(m['reuse_center'])})")
     print(f"plan: overlap speedup {m['plan_overlap_speedup']:.2f}× vs naive, "
           f"projected makespan {m['plan_makespan_s']*1e3:.2f} ms on TPU link")
+
+    # --- 2. two tenants through the continuous-batching engine ----------
+    rng = np.random.default_rng(0)
+    variant = perturbed_variant(params)
+    eng = ServingEngine(
+        [EngineModel("base", params, cfg, kv_slots=3, max_seq=40),
+         EngineModel("variant", variant, cfg, kv_slots=3, max_seq=40)],
+        weight_arena_slots=cfg.n_layers + 2,   # < 2 models -> tenant swaps
+        sched=SchedulerConfig(model_turn_steps=4))
+    for i in range(6):
+        prompt = rng.integers(1, cfg.vocab, int(rng.integers(4, 12))).tolist()
+        eng.submit("base" if i % 2 == 0 else "variant", prompt,
+                   max_new_tokens=6)
+    print("\nserving 6 requests across 2 tenants (continuous batching):")
+    print(format_summary(eng.run()))
 
 
 if __name__ == "__main__":

@@ -1,10 +1,12 @@
-"""Serving launcher: batched prefill + decode, optionally through the ARAS
-streaming executor (weights larger than the device arena).
+"""Serving launcher: batched prefill + decode, the ARAS streaming executor
+(weights larger than the device arena), or the continuous-batching engine
+(many concurrent requests across multiple tenant models).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --smoke \
         --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b --smoke \
         --streaming --arena-slots 3
+    PYTHONPATH=src python -m repro.launch.serve --smoke --engine
 """
 from __future__ import annotations
 
@@ -17,8 +19,49 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config, supported_shapes
 from repro.data.pipeline import DataConfig, make_batch
-from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch.steps import cached_prefill_step, cached_serve_step
 from repro.nn.model import init_params
+
+
+def _run_engine(args) -> None:
+    """Continuous batching across ≥ 2 tenants on one device budget."""
+    from repro.serving import (EngineModel, SchedulerConfig, ServingEngine,
+                               format_summary)
+    from repro.serving.variants import perturbed_variant
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    max_seq = args.prompt_len + args.gen + 8
+    base = init_params(jax.random.PRNGKey(0), cfg)
+    # tenant-b is a perturbed variant of tenant-a (the co-hosted fine-tune
+    # regime where cross-tenant §V-C delta installs have real structure).
+    variant = perturbed_variant(base)
+    tenants = [
+        EngineModel("tenant-a", base, cfg, kv_slots=args.kv_slots,
+                    max_seq=max_seq),
+        EngineModel("tenant-b", variant, cfg, kv_slots=args.kv_slots,
+                    max_seq=max_seq),
+    ]
+    # A weight arena smaller than both tenants' layer sets forces ARAS-style
+    # cross-tenant delta installs when the scheduler switches models.
+    weight_slots = (args.weight_slots if args.weight_slots
+                    else cfg.n_layers + 1)
+    eng = ServingEngine(
+        tenants, weight_arena_slots=weight_slots,
+        sched=SchedulerConfig(max_prefill_per_step=4,
+                              model_turn_steps=args.turn_steps,
+                              policy=args.queue_policy))
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        model = tenants[i % len(tenants)].name
+        plen = int(rng.integers(max(args.prompt_len // 2, 2),
+                                args.prompt_len + 1))
+        prompt = rng.integers(1, cfg.vocab, plen).tolist()
+        eng.submit(model, prompt, max_new_tokens=args.gen)
+    summary = eng.run()
+    print(f"engine: {args.requests} requests across {len(tenants)} models, "
+          f"{args.kv_slots} KV slots each, weight arena {weight_slots} slots")
+    print(format_summary(summary))
 
 
 def main() -> None:
@@ -31,11 +74,26 @@ def main() -> None:
     p.add_argument("--streaming", action="store_true",
                    help="serve through the ARAS streaming executor")
     p.add_argument("--arena-slots", type=int, default=3)
+    p.add_argument("--engine", action="store_true",
+                   help="continuous-batching engine, 2 tenants")
+    p.add_argument("--requests", type=int, default=10,
+                   help="engine: number of requests to submit")
+    p.add_argument("--kv-slots", type=int, default=4,
+                   help="engine: KV slots per tenant")
+    p.add_argument("--weight-slots", type=int, default=0,
+                   help="engine: weight arena slots (0 = n_layers+1)")
+    p.add_argument("--turn-steps", type=int, default=8,
+                   help="engine: tenant time-slice length in steps")
+    p.add_argument("--queue-policy", choices=("fcfs", "sjf"), default="fcfs")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if "decode_32k" not in supported_shapes(args.arch):
         raise SystemExit(f"{args.arch} is encoder-only: no decode path")
+
+    if args.engine:
+        _run_engine(args)
+        return
 
     params = init_params(jax.random.PRNGKey(0), cfg)
     data = DataConfig(seq_len=args.prompt_len, global_batch=args.batch)
@@ -56,8 +114,8 @@ def main() -> None:
 
     prefix = cfg.prefix_len if cfg.input_mode == "prefix_vlm" else 0
     cache_len = args.prompt_len + prefix + args.gen
-    prefill_fn = jax.jit(make_prefill_step(cfg, cache_len=cache_len))
-    serve_fn = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+    prefill_fn = cached_prefill_step(cfg, cache_len)
+    serve_fn = cached_serve_step(cfg)
 
     t0 = time.perf_counter()
     logits, caches = prefill_fn(params, batch)

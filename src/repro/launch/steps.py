@@ -57,6 +57,21 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
+# Jit-compiled step cache shared by every engine/launcher instance touching
+# the same config: ModelConfig is frozen/hashable, so two ServingEngine
+# instances (e.g. the reuse-on/reuse-off benchmark arms) compile once.
+@functools.lru_cache(maxsize=None)
+def cached_prefill_step(cfg: ModelConfig, cache_len: int):
+    return jax.jit(make_prefill_step(cfg, cache_len=cache_len))
+
+
+@functools.lru_cache(maxsize=None)
+def cached_serve_step(cfg: ModelConfig):
+    """Batched decode step; `pos` may be a scalar or a per-row (B,) vector —
+    the vector form is what slot-based continuous batching decodes with."""
+    return jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+
+
 # ------------------------------------------------------------- shardings
 def _is_spec_leaf(x) -> bool:
     return isinstance(x, tuple) and all(

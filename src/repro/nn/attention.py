@@ -332,13 +332,17 @@ def attention(
             new_cache = {"k": kc, "v": vc}
         Sc = kc.shape[1]
         kpos = jnp.arange(Sc)[None, :]
+        # cp: (1, 1) scalar broadcast or (B, 1) per-sequence positions — the
+        # continuous-batching engine decodes a slot batch where every row
+        # sits at a different position.
+        cp = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
         if ring:
             # Absolute position held by slot i: the largest p ≤ cache_pos
             # with p ≡ i (mod ring).
-            abs_pos = cache_pos - ((cache_pos - kpos) % ring)
-            valid = (abs_pos >= 0) & (abs_pos > cache_pos - ring)
+            abs_pos = cp - ((cp - kpos) % ring)
+            valid = (abs_pos >= 0) & (abs_pos > cp - ring)
         else:
-            valid = kpos <= cache_pos
+            valid = kpos <= cp
         scale = 1.0 / math.sqrt(cfg.head_dim)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
                        kc.astype(jnp.float32)) * scale
@@ -447,7 +451,8 @@ def _mla_attention(params, x, cfg: ModelConfig, *, positions, prefix_len,
         kr_c = shard(kr_c, "batch", "sp", None)
         new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
         Sc = ckv_c.shape[1]
-        valid = (jnp.arange(Sc)[None, :] <= cache_pos)
+        cp = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
+        valid = (jnp.arange(Sc)[None, :] <= cp)
         w_uk = params["w_uk"].astype(jnp.float32).reshape(
             cfg.kv_lora_rank, H, nope)
         w_uv = params["w_uv"].astype(jnp.float32).reshape(

@@ -1,0 +1,110 @@
+"""Slot-managed KV-cache arena for continuous batching.
+
+The arena is one device cache pytree with a leading *slot* axis (the batch
+axis of `nn.model.init_cache`), plus host-side occupancy bookkeeping that
+mirrors the crossbar-row `_Occupancy` discipline in `sim/aras.py`: a freed
+slot keeps its stale contents until the next occupant's prefill overwrites
+them — exactly like a released crossbar row holding the previous layer's
+codes — and correctness relies on the per-slot position mask, not on
+zeroing.  Requests join and leave between decode steps; a slot write only
+ever touches its own row, so eviction cannot corrupt an in-flight neighbor.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.config import ModelConfig
+from repro.nn.model import init_cache
+from repro.nn.transformer import stack_plan
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_slot_write(cfg: ModelConfig):
+    """Jitted slot-scatter shared across arena instances of the same config
+    (same policy as launch.steps.cached_serve_step): scatter a batch-1
+    prefill cache into one arena row.  Scanned segments carry the stacked
+    layer axis first, so the slot (batch) axis is 1 there, 0 on unrolled
+    segments.  The arena is donated: install() immediately rebinds
+    self.caches to the output, so the write updates in place instead of
+    copying the whole n_slots × max_seq cache pytree per admission."""
+    plan = stack_plan(cfg)
+
+    def write(caches, one, slot):
+        out = []
+        for seg_a, seg_o, (_, _, scanned) in zip(caches, one, plan):
+            ax = 1 if scanned else 0
+            out.append(jax.tree.map(
+                lambda a, o, ax=ax: jax.lax.dynamic_update_slice_in_dim(
+                    a, o.astype(a.dtype), slot, axis=ax),
+                seg_a, seg_o))
+        return out
+
+    return jax.jit(write, donate_argnums=(0,))
+
+
+class KVArena:
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.plan = stack_plan(cfg)
+        self.caches = init_cache(cfg, n_slots, max_seq)
+        self.owner: List[Optional[int]] = [None] * n_slots   # rid or None
+        self.pos = np.zeros(n_slots, np.int32)
+        self.last_token = np.zeros(n_slots, np.int32)
+        self._free: deque = deque(range(n_slots))
+        self.evictions = 0
+        self._write = _cached_slot_write(cfg)
+
+    # ------------------------------------------------------------- slots
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def active_slots(self) -> List[int]:
+        return [s for s, o in enumerate(self.owner) if o is not None]
+
+    def owner_of(self, slot: int) -> Optional[int]:
+        return self.owner[slot]
+
+    def alloc(self, rid: int) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.popleft()
+        self.owner[slot] = rid
+        return slot
+
+    def evict(self, slot: int) -> Optional[int]:
+        """Release a slot (finish or preemption).  Contents stay stale on
+        device — the occupancy map is the only thing that changes."""
+        rid = self.owner[slot]
+        if rid is None:
+            return None
+        self.owner[slot] = None
+        self._free.append(slot)
+        self.evictions += 1
+        return rid
+
+    # ------------------------------------------------------------ caches
+    def install(self, slot: int, one_caches: Any, first_token: int,
+                prompt_len: int) -> None:
+        """Write a freshly prefilled batch-1 cache into `slot` and arm its
+        decode state (next write position = prompt_len)."""
+        self.caches = self._write(self.caches, one_caches, jnp.int32(slot))
+        self.pos[slot] = prompt_len
+        self.last_token[slot] = first_token
+
+    def decode_inputs(self):
+        """(tokens (S,), pos (S,)) covering every slot; inactive slots carry
+        stale values whose decode output is discarded by the engine."""
+        return (jnp.asarray(self.last_token), jnp.asarray(self.pos))
+
+    def advance(self, slot: int, token: int) -> None:
+        self.pos[slot] += 1
+        self.last_token[slot] = token

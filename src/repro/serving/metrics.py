@@ -1,0 +1,98 @@
+"""Engine metrics surface: latency percentiles, throughput, queue depth,
+and the weight-arena install accounting merged in by the engine."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+def _pct(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, np.float64), p))
+
+
+@dataclasses.dataclass
+class StepRecord:
+    t: float
+    n_active: int
+    queue_depth: int
+    n_prefills: int
+    n_decoded: int
+    install_wire_bytes: int
+
+
+class EngineMetrics:
+    def __init__(self):
+        self.finished: List[Request] = []
+        self.steps: List[StepRecord] = []
+        self.tokens_generated = 0
+        self.max_concurrent = 0
+        self.preemptions = 0
+
+    def record_step(self, rec: StepRecord) -> None:
+        self.steps.append(rec)
+        self.max_concurrent = max(self.max_concurrent, rec.n_active)
+        self.tokens_generated += rec.n_decoded + rec.n_prefills
+
+    def record_finish(self, req: Request) -> None:
+        self.finished.append(req)
+
+    def record_preemption(self) -> None:
+        self.preemptions += 1
+
+    def summary(self, wall_s: float,
+                residency: Optional[Dict[str, float]] = None,
+                rejected: int = 0) -> Dict[str, float]:
+        lat = [r.latency for r in self.finished if r.latency is not None]
+        ttft = [r.ttft for r in self.finished if r.ttft is not None]
+        depths = [s.queue_depth for s in self.steps]
+        out = {
+            "requests_finished": float(len(self.finished)),
+            "requests_rejected": float(rejected),
+            "tokens_generated": float(self.tokens_generated),
+            "tokens_per_s": self.tokens_generated / max(wall_s, 1e-9),
+            "latency_p50_s": _pct(lat, 50),
+            "latency_p95_s": _pct(lat, 95),
+            "ttft_p50_s": _pct(ttft, 50),
+            "ttft_p95_s": _pct(ttft, 95),
+            "queue_depth_mean": float(np.mean(depths)) if depths else 0.0,
+            "queue_depth_max": float(max(depths)) if depths else 0.0,
+            "max_concurrent": float(self.max_concurrent),
+            "preemptions": float(self.preemptions),
+            "steps": float(len(self.steps)),
+            "wall_s": wall_s,
+        }
+        if residency:
+            out.update(residency)
+        return out
+
+
+def format_summary(s: Dict[str, float]) -> str:
+    lines = [
+        f"finished {int(s['requests_finished'])} requests "
+        f"({int(s['requests_rejected'])} rejected, "
+        f"{int(s['preemptions'])} preemptions) in {s['wall_s']*1e3:.0f} ms "
+        f"over {int(s['steps'])} steps",
+        f"throughput {s['tokens_per_s']:.1f} tok/s, "
+        f"max concurrent {int(s['max_concurrent'])}",
+        f"latency p50/p95 {s['latency_p50_s']*1e3:.1f}/"
+        f"{s['latency_p95_s']*1e3:.1f} ms, "
+        f"ttft p50/p95 {s['ttft_p50_s']*1e3:.1f}/"
+        f"{s['ttft_p95_s']*1e3:.1f} ms",
+        f"queue depth mean/max {s['queue_depth_mean']:.1f}/"
+        f"{int(s['queue_depth_max'])}",
+    ]
+    if "install_wire_bytes" in s:
+        lines.append(
+            f"weight installs: {int(s['installs'])} "
+            f"({int(s['cross_tenant_installs'])} cross-tenant), "
+            f"{s['install_wire_bytes']/1e6:.2f} MB wire vs "
+            f"{s['install_raw_bytes']/1e6:.2f} MB raw "
+            f"(saved {s['install_savings']:.1%}, "
+            f"skip {s['install_mean_skip']:.1%})")
+    return "\n".join(lines)

@@ -1,0 +1,61 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A request is a (tenant model, prompt, token budget) triple plus the mutable
+serving state the engine tracks: which KV slot it occupies, what it has
+generated so far, and the timestamps the metrics surface aggregates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Tuple
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+    REJECTED = "rejected"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    model: str
+    prompt: Tuple[int, ...]
+    max_new_tokens: int
+    arrival_t: float
+    status: RequestStatus = RequestStatus.QUEUED
+    slot: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    def serving_prompt(self) -> Tuple[int, ...]:
+        """The token prefix a (re-)prefill must run over.  After a
+        preemption this includes everything generated so far, so the next
+        prefill's last-position logits produce exactly the token the evicted
+        decode would have produced."""
+        return self.prompt + tuple(self.generated)
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_t is None:
+            return None
+        return self.finish_t - self.arrival_t
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.arrival_t

@@ -1,0 +1,204 @@
+"""Multi-model weight-arena residency: §V-C weight reuse across tenants.
+
+The engine serves several models off one device weight arena of layer-sized
+slots.  Every tenant's big tensors are quantized into ONE `QuantizedStore`,
+so the §V-C mean-centering picks a single Center across *all* tenants —
+cross-model deltas then skip as many cells as cross-layer deltas do inside
+one model.  When the step scheduler switches which model's slots decode, the
+manager installs that model's layer codes, choosing for each incoming layer
+the victim slot whose current occupant minimizes the delta wire bytes
+(greedy min-delta assignment = "order installs by delta similarity"), and
+accounts raw vs wire bytes exactly like `streaming/executor.py` does for a
+single model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import jax
+import numpy as np
+
+from repro.nn.config import ModelConfig
+from repro.nn.transformer import stack_plan
+from repro.streaming.delta import QuantizedStore
+from repro.streaming.executor import _split_block_params
+
+
+def model_layer_tensors(params: Any, cfg: ModelConfig) -> List[List[np.ndarray]]:
+    """Per-layer big (quantizable) tensors, mirroring StreamingExecutor's
+    block extraction: scanned segments are unstacked into individual layers."""
+    blocks = []
+    for seg_params, (start, length, scanned) in zip(
+            params["stack"]["segments"], stack_plan(cfg)):
+        if scanned:
+            blocks.extend(
+                jax.tree.map(lambda a, i=i: np.asarray(a[i]), seg_params)
+                for i in range(length))
+        else:
+            blocks.append(seg_params)
+    return [_split_block_params(bp)[0] for bp in blocks]
+
+
+@dataclasses.dataclass
+class ResidencyStats:
+    raw_bytes: int = 0
+    wire_bytes: int = 0
+    installs: int = 0
+    cold_installs: int = 0
+    cross_tenant_installs: int = 0
+    skips: float = 0.0
+
+    @property
+    def mean_skip(self) -> float:
+        return self.skips / max(self.installs, 1)
+
+    @property
+    def savings(self) -> float:
+        """Fraction of raw install traffic the delta stream avoided."""
+        if self.raw_bytes == 0:
+            return 0.0
+        return 1.0 - self.wire_bytes / self.raw_bytes
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "install_raw_bytes": float(self.raw_bytes),
+            "install_wire_bytes": float(self.wire_bytes),
+            "installs": float(self.installs),
+            "cold_installs": float(self.cold_installs),
+            "cross_tenant_installs": float(self.cross_tenant_installs),
+            "install_mean_skip": self.mean_skip,
+            "install_savings": self.savings,
+        }
+
+
+class WeightResidencyManager:
+    def __init__(self, models: Dict[str, Tuple[Any, ModelConfig]],
+                 arena_slots: int, *, reuse: bool = True):
+        store_input: List[Tuple[str, List[np.ndarray]]] = []
+        offset_groups: List[int] = []
+        self.layer_ids: Dict[str, List[int]] = {}
+        self.model_of: List[str] = []
+        for name, (params, cfg) in models.items():
+            per_layer = model_layer_tensors(params, cfg)
+            ids = []
+            for i, tensors in enumerate(per_layer):
+                ids.append(len(store_input))
+                store_input.append((f"{name}/L{i}", tensors))
+                offset_groups.append(i)   # align tenants layer-by-layer
+                self.model_of.append(name)
+            self.layer_ids[name] = ids
+        # reuse=False is the paper's baseline: every cell programmed on every
+        # install (raw stream, no centering).  reuse=True is §V-C applied
+        # across tenants: equal-cell skipping + pooled per-layer-group
+        # centering so model variants stay code-aligned.
+        self.reuse = reuse
+        self.store = QuantizedStore(store_input, reuse=reuse,
+                                    offset_groups=offset_groups)
+
+        biggest = max(len(ids) for ids in self.layer_ids.values())
+        if arena_slots < biggest:
+            raise ValueError(
+                f"weight arena of {arena_slots} slots cannot hold the "
+                f"largest model ({biggest} layers)")
+        self.arena_slots = arena_slots
+        self.slots: List[Optional[int]] = [None] * arena_slots  # store idx
+        self.resident: Dict[int, int] = {}                      # layer -> slot
+        self._stamp = [0] * arena_slots                         # LRU step
+        self.stats = ResidencyStats()
+        # Codes are immutable after store construction, so the (occupant,
+        # incoming) pair cost is memoizable — tenant turns repeat the same
+        # pairs every switch.
+        self._cost_cache: Dict[Tuple[Optional[int], int], Tuple[int, float]] = {}
+
+    # ---------------------------------------------------------- capacity
+    def layers_of(self, models: Iterable[str]) -> int:
+        return sum(len(self.layer_ids[m]) for m in set(models))
+
+    def fits(self, models: Iterable[str]) -> bool:
+        """Can all these tenants be simultaneously resident?"""
+        return self.layers_of(models) <= self.arena_slots
+
+    def resident_fraction(self, model: str) -> float:
+        ids = self.layer_ids[model]
+        return sum(1 for l in ids if l in self.resident) / max(len(ids), 1)
+
+    # ----------------------------------------------------------- install
+    def _cost(self, occupant: Optional[int], layer: int) -> Tuple[int, float]:
+        """Wire bytes to install `layer` over `occupant`.  The installer
+        ships whichever stream is cheaper — the entropy-coded cell delta or
+        the raw codes — so a dissimilar occupant never costs MORE than a
+        cold install (delta entropy can exceed 2 bits/cell between
+        unrelated tenants).  With reuse off every install ships raw."""
+        raw = self.store.layers[layer].codes.size
+        if not self.reuse:
+            return raw, 0.0
+        key = (occupant, layer)
+        if key not in self._cost_cache:
+            wire, skip = self.store.install_cost(occupant, layer)
+            self._cost_cache[key] = (raw, 0.0) if wire >= raw else (wire, skip)
+        return self._cost_cache[key]
+
+    def _install(self, layer: int, slot: int, step: int) -> int:
+        occupant = self.slots[slot]
+        wire, skip = self._cost(occupant, layer)
+        raw = self.store.layers[layer].codes.size
+        self.stats.raw_bytes += raw
+        self.stats.wire_bytes += wire
+        self.stats.installs += 1
+        self.stats.skips += skip
+        if occupant is None:
+            self.stats.cold_installs += 1
+        else:
+            self.resident.pop(occupant, None)
+            if self.model_of[occupant] != self.model_of[layer]:
+                self.stats.cross_tenant_installs += 1
+        self.slots[slot] = layer
+        self.resident[layer] = slot
+        self._stamp[slot] = step
+        return wire
+
+    def ensure(self, model: str, step: int,
+               pinned: Set[str] = frozenset()) -> int:
+        """Make every layer of `model` resident; returns wire bytes moved.
+
+        Victim slots are those holding no layer of a pinned (actively
+        decoding) tenant.  Installs are ordered greedily by delta
+        similarity: at each step the (incoming layer, victim slot) pair with
+        the cheapest delta stream installs first, so similar cross-tenant
+        layers land on top of each other.
+        """
+        pinned = set(pinned) | {model}
+        missing = [l for l in self.layer_ids[model] if l not in self.resident]
+        if not missing:
+            for l in self.layer_ids[model]:
+                self._stamp[self.resident[l]] = step
+            return 0
+
+        def evictable(slot: int) -> bool:
+            occ = self.slots[slot]
+            return occ is None or self.model_of[occ] not in pinned
+
+        candidates = [s for s in range(self.arena_slots) if evictable(s)]
+        if len(candidates) < len(missing):
+            raise RuntimeError(
+                f"weight arena too small: need {len(missing)} slots for "
+                f"{model}, only {len(candidates)} evictable")
+
+        wire_total = 0
+        while missing:
+            best = None
+            for layer in missing:
+                for slot in candidates:
+                    wire, _ = self._cost(self.slots[slot], layer)
+                    # ties (e.g. reuse off: everything raw) break LRU-first
+                    key = (wire, self._stamp[slot])
+                    if best is None or key < best[0]:
+                        best = (key, layer, slot)
+            _, layer, slot = best
+            wire_total += self._install(layer, slot, step)
+            missing.remove(layer)
+            candidates.remove(slot)
+        for l in self.layer_ids[model]:
+            self._stamp[self.resident[l]] = step
+        return wire_total

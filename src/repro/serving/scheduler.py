@@ -1,0 +1,110 @@
+"""Admission control and step scheduling for the serving engine.
+
+Slot-based continuous batching: between decode steps the scheduler admits
+waiting requests into free KV slots (each admission runs that request's
+prefill — the step mixes prefill and decode work), and picks which tenants
+decode this step.  When every active tenant's weights fit the device weight
+arena simultaneously, all of them decode every step; otherwise the
+scheduler time-slices tenants in turns of `model_turn_steps` so the weight
+arena is rewritten once per turn instead of once per step — the ARAS
+install-amortization discipline applied across models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.serving.request import Request, RequestStatus
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_queue: int = 256          # admission control: reject beyond this
+    max_active: Optional[int] = None  # global concurrent-slot budget
+    policy: str = "fcfs"          # fcfs | sjf (shortest prompt first)
+    max_prefill_per_step: int = 2  # prefill/decode mixing ratio cap
+    model_turn_steps: int = 8     # tenant time-slice when weights don't fit
+
+    def __post_init__(self):
+        if self.policy not in ("fcfs", "sjf"):
+            raise ValueError(f"unknown queue policy {self.policy!r} "
+                             "(expected 'fcfs' or 'sjf')")
+
+
+class StepScheduler:
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self.queue: List[Request] = []
+        self.rejected = 0
+        self._turn_model: Optional[str] = None
+        self._turn_left = 0
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    # --------------------------------------------------------- admission
+    def submit(self, req: Request) -> bool:
+        if len(self.queue) >= self.cfg.max_queue:
+            req.status = RequestStatus.REJECTED
+            self.rejected += 1
+            return False
+        self.queue.append(req)
+        return True
+
+    def requeue(self, req: Request) -> None:
+        """Preempted requests go to the head: they already hold progress."""
+        req.status = RequestStatus.PREEMPTED
+        self.queue.insert(0, req)
+
+    def next_admits(self, free_slots: Dict[str, int], n_active: int
+                    ) -> List[Request]:
+        """Pop up to `max_prefill_per_step` requests that have a free KV
+        slot in their tenant's arena and fit the global active budget."""
+        budget = (float("inf") if self.cfg.max_active is None
+                  else self.cfg.max_active)
+        order = list(self.queue)
+        if self.cfg.policy == "sjf":
+            # preempted requests keep their head-of-queue priority (they
+            # hold generated progress); only fresh arrivals sort by length
+            order.sort(key=lambda r: (
+                r.status is not RequestStatus.PREEMPTED,
+                len(r.serving_prompt())))
+        free = dict(free_slots)
+        admits: List[Request] = []
+        for req in order:
+            if len(admits) >= self.cfg.max_prefill_per_step:
+                break
+            if n_active + len(admits) >= budget:
+                break
+            if free.get(req.model, 0) <= 0:
+                continue
+            free[req.model] -= 1
+            admits.append(req)
+        for req in admits:
+            self.queue.remove(req)
+        return admits
+
+    # ------------------------------------------------------ decode picks
+    def pick_models(self, demand_models: Sequence[str], residency
+                    ) -> List[str]:
+        """Which tenants run this step (decode AND admissions — prefill only
+        happens on a scheduled, weight-resident tenant).  All tenants with
+        demand run when co-resident in the weight arena; otherwise the
+        scheduler holds one tenant for `model_turn_steps` steps so installs
+        amortize.  The turn is stateful — tenants joining or draining
+        mid-turn never remap the current pick."""
+        demand = sorted(set(demand_models))
+        if not demand:
+            self._turn_model, self._turn_left = None, 0
+            return []
+        if residency is None or residency.fits(demand):
+            self._turn_model, self._turn_left = None, 0
+            return demand
+        if self._turn_model not in demand or self._turn_left <= 0:
+            # rotate cyclically past the previous turn holder
+            after = [m for m in demand if m > (self._turn_model or "")]
+            self._turn_model = after[0] if after else demand[0]
+            self._turn_left = max(self.cfg.model_turn_steps, 1)
+        self._turn_left -= 1
+        return [self._turn_model]

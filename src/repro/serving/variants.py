@@ -1,0 +1,23 @@
+"""Tenant-variant helper shared by the launcher, example and benchmark:
+derive a "fine-tuned" copy of a model's params (small deltas on the big
+tensors) — the co-hosted model-variant regime where cross-tenant §V-C
+delta installs have real structure to exploit."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def perturbed_variant(params: Any, scale: float = 0.02, seed: int = 1) -> Any:
+    rng = np.random.default_rng(seed)
+
+    def perturb(leaf):
+        a = np.asarray(leaf)
+        if a.ndim >= 2 and a.size >= 1024:
+            return a + (scale * a.std() *
+                        rng.standard_normal(a.shape)).astype(a.dtype)
+        return a
+
+    return jax.tree.map(perturb, params)

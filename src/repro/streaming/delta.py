@@ -71,10 +71,20 @@ class LayerWeights:
 
 
 class QuantizedStore:
-    """Host-resident quantized model with cross-layer re-encoding."""
+    """Host-resident quantized model with cross-layer re-encoding.
+
+    ``offset_groups`` (optional, one label per layer) pools the §V-C offset
+    decision: all layers sharing a label get ONE offset computed from their
+    pooled codes.  A multi-tenant store groups aligned layers of model
+    variants this way — per-layer offsets would shift near-identical tenant
+    copies by slightly different amounts (their code means differ by
+    rounding), turning a near-zero delta stream into a uniform ±1 shift of
+    every cell and destroying the cross-tenant reuse it exists to enable.
+    """
 
     def __init__(self, layers: Sequence[Tuple[str, List[np.ndarray]]],
-                 reuse: bool = True, max_clip_rate: float = 4e-3):
+                 reuse: bool = True, max_clip_rate: float = 4e-3,
+                 offset_groups: Optional[Sequence[object]] = None):
         # Quantize each tensor per-tensor (uint8 affine).
         self.layers: List[LayerWeights] = []
         concat_codes = []
@@ -96,17 +106,53 @@ class QuantizedStore:
 
         self.center: Optional[int] = None
         if reuse:
-            encs, center = encode_network(concat_codes, enabled=True,
-                                          max_clip_rate=max_clip_rate)
+            if offset_groups is None:
+                encs, center = encode_network(concat_codes, enabled=True,
+                                              max_clip_rate=max_clip_rate)
+                offsets = [e.offset for e in encs]
+            else:
+                assert len(offset_groups) == len(self.layers)
+                groups = list(dict.fromkeys(offset_groups))  # stable order
+                # Subsample members before pooling: offsets only need group
+                # means/histograms (which converge long before 256k samples)
+                # and a full concatenation would transiently duplicate the
+                # whole multi-tenant code store.
+                cap = 1 << 18
+                pooled = []
+                for g in groups:
+                    member = [cat[::max(1, cat.size // cap)]
+                              for (_, cat), gg in zip(concat_codes,
+                                                      offset_groups)
+                              if gg == g and cat.size]
+                    pooled.append((str(g), np.concatenate(member)
+                                   if member else np.zeros(1, np.uint8)))
+                encs, center = encode_network(pooled, enabled=True,
+                                              max_clip_rate=max_clip_rate)
+                off_of = {g: e.offset for g, e in zip(groups, encs)}
+                # Per-member accuracy guard: encode_network only checked the
+                # pooled clip rate; a member sitting near the code extremes
+                # could clip far above it.  Zero the WHOLE group's offset
+                # (not just the member) so aligned tenants stay aligned.
+                worst = {g: 0.0 for g in groups}
+                for (_, cat), g in zip(concat_codes, offset_groups):
+                    off = off_of[g]
+                    if cat.size and off:
+                        clipped = (np.count_nonzero(cat > 255 - off)
+                                   if off > 0 else
+                                   np.count_nonzero(cat < -off))
+                        worst[g] = max(worst[g], clipped / cat.size)
+                off_of = {g: (0 if worst[g] > max_clip_rate else o)
+                          for g, o in off_of.items()}
+                offsets = [off_of[g] for g in offset_groups]
             self.center = center
-            for lw, enc in zip(self.layers, encs):
-                if enc.offset:
-                    shifted = np.clip(lw.codes.astype(np.int32) + enc.offset,
+            for lw, off in zip(self.layers, offsets):
+                if off:
+                    shifted = np.clip(lw.codes.astype(np.int32) + off,
                                       0, 255).astype(np.uint8)
                     lw.codes = shifted
-                    lw.offset = enc.offset
+                    lw.offset = off
                     # Eq. 7: compensate through the zero point.
-                    lw.zero_points = [zp + enc.offset for zp in lw.zero_points]
+                    lw.zero_points = [zp + off for zp in lw.zero_points]
 
     def install_cost(self, resident: Optional[int], incoming: int
                      ) -> Tuple[int, float]:

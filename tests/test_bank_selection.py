@@ -2,6 +2,7 @@
 import itertools
 
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bank_selection import Bank, make_banks, select_banks

@@ -1,5 +1,8 @@
 """§V-C Adaptive Partial Weight Reuse properties."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.weight_reuse import (

@@ -9,6 +9,10 @@ the continuous-batching `ServingEngine` on a weight arena too small to hold
 both, so every tenant switch delta-installs layer codes §V-C-style across
 tenants.
 
+Part 3 switches the KV cache to the paged layout: requests sharing a system
+prompt share physical KV pages (copy-on-write on divergence), and one
+request runs far past the slot layout's per-request `max_seq` ceiling.
+
     PYTHONPATH=src python examples/serve_stream.py
 """
 import sys
@@ -62,6 +66,26 @@ def main() -> None:
                    max_new_tokens=6)
     print("\nserving 6 requests across 2 tenants (continuous batching):")
     print(format_summary(eng.run()))
+
+    # --- 3. paged KV: shared prefixes + no per-request max_seq ----------
+    peng = ServingEngine(
+        [EngineModel("base", params, cfg, kv_slots=4, max_seq=16,
+                     kv_layout="paged", page_size=4, n_pages=24)])
+    sys_prompt = rng.integers(1, cfg.vocab, 9).tolist()   # 2 full + 1 partial page
+    for _ in range(3):   # same system prompt -> shared pages, COW on divergence
+        peng.submit("base", sys_prompt, max_new_tokens=5)
+    # 3× past the slot layout's max_seq=16 ceiling: just more pages
+    long_req = peng.submit("base", rng.integers(1, cfg.vocab, 24).tolist(),
+                           max_new_tokens=24)
+    # temperature sampling rides along (seeded per-request PRNG)
+    sampled = peng.submit("base", sys_prompt, max_new_tokens=5,
+                          temperature=0.8, top_k=16, seed=7)
+    print("\nserving 5 requests through the paged KV arena "
+          "(page_size=4, 24 pages):")
+    print(format_summary(peng.run()))
+    print(f"long request spanned {long_req.prompt_len + 24} tokens "
+          f"(slot arena ceiling was 16); sampled request: "
+          f"{sampled.generated}")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,7 @@ Each module exposes ``full()`` (the exact published config) and ``smoke()``
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Tuple
 
 from repro.nn.config import ModelConfig
 

@@ -16,7 +16,7 @@ finish before the next weights are ready anyway).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

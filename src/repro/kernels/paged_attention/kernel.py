@@ -1,0 +1,97 @@
+"""Pallas paged-attention decode kernel, TPU-targeted.
+
+Batched single-token decode over a paged KV layout: K/V live in a page
+pool (P, page, Hkv, D) and each batch row addresses its sequence through a
+page table (B, T) of physical page ids (`repro.serving.paging` builds
+both).
+
+Grid: (batch, kv_heads).  Each program holds one row's G grouped query
+heads and streams that row's page table with the online-softmax recurrence:
+for logical block t it reads the physical page id from the table, gathers
+the (page, D) K/V tile out of the pool with a dynamic dslice, masks
+positions beyond the row's current position, and folds the tile into the
+running (max, denom, acc) — the FlashAttention-2 schedule over a scattered
+KV layout.  The fori_loop upper bound is pos // page + 1, so fully-masked
+tail blocks are never touched (real work skipping, like the causal bound
+in `flash_attention`).
+
+Contract matches `repro.kernels.paged_attention.ref.paged_attention_ref`
+(its jnp gather math is the oracle in tests, and mirrors the paged decode
+path in `repro.nn.attention`).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, tab_ref, pos_ref, o_ref, *, page: int,
+            scale: float):
+    # q_ref (1, 1, G, D); k/v_ref (P, page, 1, D); tab_ref (1, T);
+    # pos_ref (1,); o_ref (1, 1, G, D)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+    G, D = q.shape
+    pos = pos_ref[0]
+    hi = pos // page + 1                                  # blocks holding
+    # positions ≤ pos; everything past is fully masked — skip it.
+
+    def body(t, carry):
+        m, l, acc = carry
+        pid = tab_ref[0, t]
+        # NB: dslice (not a bare int) on the leading axis — interpret-mode
+        # discharge rejects scalar int indices in pl.load tuples.
+        k = pl.load(k_ref, (pl.dslice(pid, 1), slice(None), pl.dslice(0, 1),
+                            slice(None)))[0, :, 0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(pid, 1), slice(None), pl.dslice(0, 1),
+                            slice(None)))[0, :, 0].astype(jnp.float32)
+        s = q @ k.T                                       # (G, page)
+        kpos = t * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((G,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((G,), jnp.float32)
+    a0 = jnp.zeros((G, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jax.Array,        # (B, Hkv, G, D) grouped query heads
+    k_pool: jax.Array,   # (P, page, Hkv, D)
+    v_pool: jax.Array,
+    tables: jax.Array,   # (B, T) int32 physical page ids
+    pos: jax.Array,      # (B,) int32 current position per row
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, D = q.shape
+    P, page = k_pool.shape[:2]
+    T = tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    kern = functools.partial(_kernel, page=page, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((P, page, 1, D), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((P, page, 1, D), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((1, T), lambda b, h: (b, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(q, k_pool, v_pool, tables, pos)

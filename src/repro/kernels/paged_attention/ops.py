@@ -1,0 +1,21 @@
+"""Jitted wrapper: groups query heads per KV head (GQA stays native — no
+pool expansion) and picks interpret mode off-TPU."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+
+
+@jax.jit
+def paged_attention(q, k_pool, v_pool, tables, pos):
+    """q: (B, H, D) one query token per row; k/v_pool: (P, page, Hkv, D)
+    page pools (H a multiple of Hkv); tables: (B, T) int32 physical page
+    ids; pos: (B,) int32 per-row positions.  Returns (B, H, D)."""
+    B, H, D = q.shape
+    Hkv = k_pool.shape[2]
+    qg = q.reshape(B, Hkv, H // Hkv, D)
+    interpret = jax.default_backend() != "tpu"
+    o = paged_attention_pallas(qg, k_pool, v_pool,
+                               tables.astype(jnp.int32),
+                               pos.astype(jnp.int32), interpret=interpret)
+    return o.reshape(B, H, D)

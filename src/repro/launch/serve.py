@@ -35,11 +35,11 @@ def _run_engine(args) -> None:
     # tenant-b is a perturbed variant of tenant-a (the co-hosted fine-tune
     # regime where cross-tenant §V-C delta installs have real structure).
     variant = perturbed_variant(base)
+    kv = dict(kv_slots=args.kv_slots, max_seq=max_seq,
+              kv_layout=args.kv_layout, page_size=args.page_size)
     tenants = [
-        EngineModel("tenant-a", base, cfg, kv_slots=args.kv_slots,
-                    max_seq=max_seq),
-        EngineModel("tenant-b", variant, cfg, kv_slots=args.kv_slots,
-                    max_seq=max_seq),
+        EngineModel("tenant-a", base, cfg, **kv),
+        EngineModel("tenant-b", variant, cfg, **kv),
     ]
     # A weight arena smaller than both tenants' layer sets forces ARAS-style
     # cross-tenant delta installs when the scheduler switches models.
@@ -85,6 +85,12 @@ def main() -> None:
     p.add_argument("--turn-steps", type=int, default=8,
                    help="engine: tenant time-slice length in steps")
     p.add_argument("--queue-policy", choices=("fcfs", "sjf"), default="fcfs")
+    p.add_argument("--kv-layout", choices=("slot", "paged"), default="slot",
+                   help="engine: whole-sequence KV slots, or paged KV with "
+                        "prefix sharing (removes the per-request max_seq "
+                        "ceiling)")
+    p.add_argument("--page-size", type=int, default=8,
+                   help="engine: tokens per KV page (kv_layout=paged)")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -6,7 +6,7 @@ serve.py) and the dry-run exercise the *same* code.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,7 @@ from repro.nn.model import decode_step, init_cache, init_params, lm_loss, prefil
 from repro.nn.transformer import layer_kind
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.schedules import cosine, wsd
-from repro.parallel.sharding import batch_axes, make_spec
+from repro.parallel.sharding import make_spec
 
 
 # ----------------------------------------------------------------- steps
@@ -70,6 +70,21 @@ def cached_serve_step(cfg: ModelConfig):
     """Batched decode step; `pos` may be a scalar or a per-row (B,) vector —
     the vector form is what slot-based continuous batching decodes with."""
     return jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+
+
+def make_paged_serve_step(cfg: ModelConfig):
+    def paged_serve_step(params, token, caches, pos, page_table):
+        return decode_step(params, token, caches, pos, cfg,
+                           page_table=page_table)
+    return paged_serve_step
+
+
+@functools.lru_cache(maxsize=None)
+def cached_paged_serve_step(cfg: ModelConfig):
+    """Decode step over a paged KV arena: caches are page pools, `pos` is
+    the per-row (B,) write positions, `page_table` (B, T) maps each row's
+    logical blocks to physical pages (serving.paging builds both)."""
+    return jax.jit(make_paged_serve_step(cfg), donate_argnums=(2,))
 
 
 # ------------------------------------------------------------- shardings

@@ -282,12 +282,16 @@ def attention(
     cache_pos: Optional[jax.Array] = None,
     make_cache: bool = False,
     cache_len: int = 0,
+    page_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Unified attention entry point.
 
     * train:   cache=None, make_cache=False
     * prefill: cache=None, make_cache=True (cache_len ≥ S)
     * decode:  cache given, S == 1, cache_pos = current position
+    * paged decode: cache leaves are page pools (P, page, ...) and
+      page_table (B, T) maps each row's logical blocks to physical pages
+      (cache_pos must be a per-row (B,) vector)
     """
     B, S, _ = x.shape
     if positions is None:
@@ -302,47 +306,64 @@ def attention(
         return _mla_attention(params, x, cfg, positions=positions,
                               prefix_len=prefix_len, cache=cache,
                               cache_pos=cache_pos, make_cache=make_cache,
-                              cache_len=cache_len)
+                              cache_len=cache_len, page_table=page_table)
 
     q, k, v = _gqa_qkv(params, x, cfg, positions)
     new_cache = None
 
     if cache is not None:
-        # Decode: append to the ring/full cache then attend over it.  SWA
-        # layers keep a ring buffer of `window` slots (slot = pos % window).
-        ring = layer_window if 0 < layer_window < cache["k"].shape[1] else 0
-        slot = cache_pos % ring if ring else cache_pos
-        if cfg.kv_cache_dtype == "int8":
-            kq, ks = _kv_quant(k)
-            vq, vs = _kv_quant(v)
-            kc8 = _dus_batch(cache["k"], kq, slot)
-            vc8 = _dus_batch(cache["v"], vq, slot)
-            kss = _dus_batch(cache["k_scale"], ks, slot)
-            vss = _dus_batch(cache["v_scale"], vs, slot)
-            kc8 = shard(kc8, "batch", "sp", None, None)
-            vc8 = shard(vc8, "batch", "sp", None, None)
-            new_cache = {"k": kc8, "v": vc8, "k_scale": kss, "v_scale": vss}
-            kc = _kv_dequant(kc8, kss, k.dtype)
-            vc = _kv_dequant(vc8, vss, v.dtype)
-        else:
-            kc = _dus_batch(cache["k"], k, slot)
-            vc = _dus_batch(cache["v"], v, slot)
-            kc = shard(kc, "batch", "sp", None, None)
-            vc = shard(vc, "batch", "sp", None, None)
-            new_cache = {"k": kc, "v": vc}
-        Sc = kc.shape[1]
-        kpos = jnp.arange(Sc)[None, :]
-        # cp: (1, 1) scalar broadcast or (B, 1) per-sequence positions — the
-        # continuous-batching engine decodes a slot batch where every row
-        # sits at a different position.
-        cp = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
-        if ring:
-            # Absolute position held by slot i: the largest p ≤ cache_pos
-            # with p ≡ i (mod ring).
-            abs_pos = cp - ((cp - kpos) % ring)
-            valid = (abs_pos >= 0) & (abs_pos > cp - ring)
-        else:
+        if page_table is not None:
+            # Paged decode: scatter the new token's K/V into its physical
+            # page, then gather the row's pages into a contiguous
+            # (B, T·page) view and run the same masked-softmax math as the
+            # slot path.  SWA layers store full positions and mask the
+            # window (no ring buffer).
+            kc, vc, new_cache = _paged_append_gqa(cache, k, v, cfg,
+                                                  cache_pos, page_table)
+            Sc = kc.shape[1]
+            kpos = jnp.arange(Sc)[None, :]
+            cp = cache_pos[:, None]
             valid = kpos <= cp
+            if layer_window > 0:
+                valid = valid & (kpos > cp - layer_window)
+        else:
+            # Decode: append to the ring/full cache then attend over it.
+            # SWA layers keep a ring buffer of `window` slots
+            # (slot = pos % window).
+            ring = layer_window if 0 < layer_window < cache["k"].shape[1] else 0
+            slot = cache_pos % ring if ring else cache_pos
+            if cfg.kv_cache_dtype == "int8":
+                kq, ks = _kv_quant(k)
+                vq, vs = _kv_quant(v)
+                kc8 = _dus_batch(cache["k"], kq, slot)
+                vc8 = _dus_batch(cache["v"], vq, slot)
+                kss = _dus_batch(cache["k_scale"], ks, slot)
+                vss = _dus_batch(cache["v_scale"], vs, slot)
+                kc8 = shard(kc8, "batch", "sp", None, None)
+                vc8 = shard(vc8, "batch", "sp", None, None)
+                new_cache = {"k": kc8, "v": vc8, "k_scale": kss,
+                             "v_scale": vss}
+                kc = _kv_dequant(kc8, kss, k.dtype)
+                vc = _kv_dequant(vc8, vss, v.dtype)
+            else:
+                kc = _dus_batch(cache["k"], k, slot)
+                vc = _dus_batch(cache["v"], v, slot)
+                kc = shard(kc, "batch", "sp", None, None)
+                vc = shard(vc, "batch", "sp", None, None)
+                new_cache = {"k": kc, "v": vc}
+            Sc = kc.shape[1]
+            kpos = jnp.arange(Sc)[None, :]
+            # cp: (1, 1) scalar broadcast or (B, 1) per-sequence positions —
+            # the continuous-batching engine decodes a slot batch where
+            # every row sits at a different position.
+            cp = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
+            if ring:
+                # Absolute position held by slot i: the largest p ≤
+                # cache_pos with p ≡ i (mod ring).
+                abs_pos = cp - ((cp - kpos) % ring)
+                valid = (abs_pos >= 0) & (abs_pos > cp - ring)
+            else:
+                valid = kpos <= cp
         scale = 1.0 / math.sqrt(cfg.head_dim)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
                        kc.astype(jnp.float32)) * scale
@@ -406,6 +427,60 @@ def attention(
     return y, new_cache
 
 
+def _paged_ops(pool_leaf, cache_pos, page_table):
+    """Scatter/gather closures over one page pool shape family.
+
+    Pool leaves carry (P, page, ...); cache_pos (B,) is each row's write
+    position and page_table (B, T) its block→physical-page map.  `scatter`
+    writes this step's (B, 1, ...) entries at (physical page, offset);
+    `gather` rebuilds the row-ordered (B, T·page, ...) view.  Updated pools
+    keep the slot path's sharding annotation (page axis in the batch role,
+    no-op without a mesh) so sharded serving doesn't silently lose the KV
+    constraint.
+
+    Each active row's target page is exclusively owned (the arena COWs
+    shared pages before the step), so the scatter rows never collide except
+    on the reserved scratch page that inactive rows aim at — whose contents
+    are never gathered.
+    """
+    page = pool_leaf.shape[1]
+    B, T = page_table.shape
+    block, offset = cache_pos // page, cache_pos % page
+    phys = page_table[jnp.arange(B), block]
+
+    def scatter(pool, new):
+        pool = pool.at[phys, offset].set(new[:, 0].astype(pool.dtype))
+        return shard(pool, "batch", "sp", *((None,) * (pool.ndim - 2)))
+
+    def gather(pool):
+        return pool[page_table].reshape((B, T * page) + pool.shape[2:])
+
+    return scatter, gather
+
+
+def _paged_append_gqa(cache, k, v, cfg: ModelConfig, cache_pos, page_table):
+    """Paged decode append + gather for GQA caches: k/v pools
+    (P, page, Hkv, D) (+ int8 scales (P, page, Hkv)); k/v are this step's
+    (B, 1, Hkv, D) projections.  Returns (kc, vc, new_cache) with kc/vc
+    gathered to (B, T·page, Hkv, D) in logical position order."""
+    scatter, gather = _paged_ops(cache["k"], cache_pos, page_table)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        new_cache = {"k": scatter(cache["k"], kq),
+                     "v": scatter(cache["v"], vq),
+                     "k_scale": scatter(cache["k_scale"], ks),
+                     "v_scale": scatter(cache["v_scale"], vs)}
+        kc = _kv_dequant(gather(new_cache["k"]), gather(new_cache["k_scale"]),
+                         k.dtype)
+        vc = _kv_dequant(gather(new_cache["v"]), gather(new_cache["v_scale"]),
+                         v.dtype)
+    else:
+        new_cache = {"k": scatter(cache["k"], k), "v": scatter(cache["v"], v)}
+        kc, vc = gather(new_cache["k"]), gather(new_cache["v"])
+    return kc, vc, new_cache
+
+
 def _dus_batch(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
     """dynamic_update_slice along axis 1 at (possibly traced) position."""
     pos = jnp.asarray(pos)
@@ -420,7 +495,8 @@ def _dus_batch(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
 
 # ==================================================================== MLA
 def _mla_attention(params, x, cfg: ModelConfig, *, positions, prefix_len,
-                   cache, cache_pos, make_cache, cache_len):
+                   cache, cache_pos, make_cache, cache_len,
+                   page_table=None):
     B, S, _ = x.shape
     H = cfg.n_heads
     nope, rope_d, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -445,11 +521,22 @@ def _mla_attention(params, x, cfg: ModelConfig, *, positions, prefix_len,
         #   out   = W_uv (Σ_s p_s c_kv_s)
         # FLOPs drop from O(S·r·H·(d_nope+d_v)) to O(S·r·H) per step
         # (≈32× here; EXPERIMENTS.md §Perf iteration 6).
-        ckv_c = _dus_batch(cache["c_kv"], c_kv, cache_pos)
-        kr_c = _dus_batch(cache["k_rope"], k_rope, cache_pos)
-        ckv_c = shard(ckv_c, "batch", "sp", None)
-        kr_c = shard(kr_c, "batch", "sp", None)
-        new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
+        if page_table is not None:
+            # Paged latent cache: scatter this token's (c_kv, k_rope) into
+            # its physical page, gather the row's pages back into logical
+            # order, then run the same absorbed math.
+            scatter, gather = _paged_ops(cache["c_kv"], cache_pos,
+                                         page_table)
+            new_cache = {"c_kv": scatter(cache["c_kv"], c_kv),
+                         "k_rope": scatter(cache["k_rope"], k_rope)}
+            ckv_c = gather(new_cache["c_kv"])
+            kr_c = gather(new_cache["k_rope"])
+        else:
+            ckv_c = _dus_batch(cache["c_kv"], c_kv, cache_pos)
+            kr_c = _dus_batch(cache["k_rope"], k_rope, cache_pos)
+            ckv_c = shard(ckv_c, "batch", "sp", None)
+            kr_c = shard(kr_c, "batch", "sp", None)
+            new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
         Sc = ckv_c.shape[1]
         cp = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
         valid = (jnp.arange(Sc)[None, :] <= cp)

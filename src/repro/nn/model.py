@@ -69,13 +69,15 @@ def forward(
     make_cache: bool = False,
     cache_len: int = 0,
     last_only: bool = False,
+    page_table=None,
 ) -> Tuple[jax.Array, Optional[Any], jax.Array]:
     """Returns (logits, new_caches, aux_loss).  ``last_only`` restricts the
     unembed to the final position (prefill/decode)."""
     x, prefix_len = _inputs_to_x(params, batch, cfg)
     x, new_caches, aux = apply_stack(
         params["stack"], x, cfg, prefix_len=prefix_len, caches=caches,
-        cache_pos=cache_pos, make_cache=make_cache, cache_len=cache_len)
+        cache_pos=cache_pos, make_cache=make_cache, cache_len=cache_len,
+        page_table=page_table)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if last_only:
         x = x[:, -1:]
@@ -212,9 +214,12 @@ def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 
 
 def decode_step(params: Params, token: jax.Array, caches, pos,
-                cfg: ModelConfig):
-    """One autoregressive step.  token (B,) int32; pos scalar int32."""
+                cfg: ModelConfig, page_table=None):
+    """One autoregressive step.  token (B,) int32; pos scalar or (B,) int32.
+    With ``page_table`` (B, T), caches are page pools and pos must be the
+    per-row (B,) write positions (see serving.paging)."""
     batch = {"tokens": token[:, None]}
     logits, new_caches, _ = forward(params, batch, cfg, caches=caches,
-                                    cache_pos=pos, last_only=True)
+                                    cache_pos=pos, last_only=True,
+                                    page_table=page_table)
     return logits[:, 0], new_caches

@@ -27,11 +27,8 @@ from repro.nn.layers import (
 from repro.nn.moe import init_moe, moe, moe_specs
 from repro.nn.ssm import (
     init_mamba,
-    init_mamba_cache,
     init_mlstm,
-    init_mlstm_cache,
     init_slstm,
-    init_slstm_cache,
     mamba,
     mamba_specs,
     mlstm,
@@ -118,6 +115,7 @@ def apply_block(
     cache_pos=None,
     make_cache: bool = False,
     cache_len: int = 0,
+    page_table=None,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     kind = layer_kind(cfg, i)
@@ -137,7 +135,7 @@ def apply_block(
     y_attn, new_attn_cache = attention(
         bp["attn"], h, cfg, layer_window=window, positions=positions,
         prefix_len=prefix_len, cache=attn_cache, cache_pos=cache_pos,
-        make_cache=make_cache, cache_len=cache_len)
+        make_cache=make_cache, cache_len=cache_len, page_table=page_table)
 
     new_cache: Optional[Params] = None
     if kind == "hybrid":
@@ -229,6 +227,7 @@ def apply_stack(
     cache_pos=None,
     make_cache: bool = False,
     cache_len: int = 0,
+    page_table=None,
 ) -> Tuple[jax.Array, Optional[Any], jax.Array]:
     aux_total = jnp.zeros((), jnp.float32)
     plan = stack_plan(cfg)
@@ -241,7 +240,8 @@ def apply_stack(
         block = functools.partial(
             apply_block, cfg=cfg, i=start, positions=positions,
             prefix_len=prefix_len, cache_pos=cache_pos,
-            make_cache=make_cache, cache_len=cache_len)
+            make_cache=make_cache, cache_len=cache_len,
+            page_table=page_table)
 
         if not scanned:
             if cfg.remat and seg_cache is None and not make_cache:

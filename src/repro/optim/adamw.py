@@ -7,7 +7,7 @@ these LRs is numerically equivalent and halves optimizer memory)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

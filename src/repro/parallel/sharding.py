@@ -21,7 +21,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

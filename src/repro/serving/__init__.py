@@ -1,16 +1,20 @@
 """Continuous-batching serving engine (ARAS scheduling machinery applied to
-multi-tenant inference): request queue + admission control, slot-managed
-KV-cache arena, multi-model weight-arena residency with cross-tenant §V-C
-delta reuse, and an engine metrics surface."""
+multi-tenant inference): request queue + admission control, slot-managed or
+paged KV-cache arenas (block page tables, refcounted prefix sharing, COW),
+multi-model weight-arena residency with cross-tenant §V-C delta reuse, and
+an engine metrics surface."""
 from repro.serving.engine import EngineModel, ServingEngine
 from repro.serving.kv_arena import KVArena
 from repro.serving.metrics import EngineMetrics, format_summary
+from repro.serving.paging import PageAllocator, PagedKVArena
 from repro.serving.request import Request, RequestStatus
 from repro.serving.residency import WeightResidencyManager
+from repro.serving.sampling import request_key, sample_token
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
 
 __all__ = [
-    "EngineModel", "ServingEngine", "KVArena", "EngineMetrics",
-    "format_summary", "Request", "RequestStatus", "WeightResidencyManager",
-    "SchedulerConfig", "StepScheduler",
+    "EngineModel", "ServingEngine", "KVArena", "PageAllocator",
+    "PagedKVArena", "EngineMetrics", "format_summary", "Request",
+    "RequestStatus", "WeightResidencyManager", "SchedulerConfig",
+    "StepScheduler", "request_key", "sample_token",
 ]

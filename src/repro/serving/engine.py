@@ -4,8 +4,12 @@ weight arena.
 One engine serves many concurrent requests across one or more tenant models
 on a fixed device budget:
 
-  * each tenant owns a slot-managed `KVArena` (requests join/leave the
-    decode batch between steps — no head-of-line blocking);
+  * each tenant owns a KV arena — slot-managed (`KVArena`) or paged
+    (`PagedKVArena`, `kv_layout="paged"`): block-granular pages with
+    refcounted prefix sharing and COW, admission gated on free *pages*
+    instead of free whole-sequence slots, and no per-request `max_seq`
+    ceiling below the pool itself (requests join/leave the decode batch
+    between steps — no head-of-line blocking either way);
   * every step admits up to `max_prefill_per_step` queued requests (their
     prefill runs immediately and yields their first token), then decodes
     one token for every active slot of the scheduled tenants in a single
@@ -27,28 +31,44 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import cached_prefill_step, cached_serve_step
+from repro.launch.steps import (cached_paged_serve_step, cached_prefill_step,
+                                cached_serve_step)
 from repro.nn.config import ModelConfig
 from repro.serving.kv_arena import KVArena
 from repro.serving.metrics import EngineMetrics, StepRecord
+from repro.serving.paging import PagedKVArena
 from repro.serving.request import Request, RequestStatus
 from repro.serving.residency import WeightResidencyManager
+from repro.serving.sampling import request_key, sample_token
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
 
 
 @dataclasses.dataclass
 class EngineModel:
-    """One tenant: a named (params, config) pair plus its KV budget."""
+    """One tenant: a named (params, config) pair plus its KV budget.
+
+    kv_layout picks the arena: "slot" binds each request to a whole
+    `max_seq` sequence slot; "paged" stores KV in `page_size`-token pages
+    (`kv_slots` becomes the decode-batch row count and the per-request
+    ceiling is the whole pool — n_pages · page_size tokens)."""
     name: str
     params: Any
     cfg: ModelConfig
     kv_slots: int = 4
     max_seq: int = 64
+    kv_layout: str = "slot"          # "slot" | "paged"
+    page_size: int = 8
+    n_pages: int = 0                 # 0 → kv_slots · ceil(max_seq/page_size)
+
+    def __post_init__(self):
+        if self.kv_layout not in ("slot", "paged"):
+            raise ValueError(f"unknown kv_layout {self.kv_layout!r} "
+                             "(expected 'slot' or 'paged')")
 
 
 class ServingEngine:
@@ -66,11 +86,18 @@ class ServingEngine:
             if m.cfg.is_encoder or m.cfg.input_mode != "tokens":
                 raise ValueError(f"{m.name}: engine serves causal token LMs")
         self.models: Dict[str, EngineModel] = {m.name: m for m in models}
-        self.arenas: Dict[str, KVArena] = {
-            m.name: KVArena(m.cfg, m.kv_slots, m.max_seq) for m in models}
-        self._prefill = {m.name: cached_prefill_step(m.cfg, m.max_seq)
-                         for m in models}
-        self._decode = {m.name: cached_serve_step(m.cfg) for m in models}
+        self.arenas: Dict[str, Any] = {}
+        self._decode: Dict[str, Callable] = {}
+        for m in models:
+            if m.kv_layout == "paged":
+                n_pages = m.n_pages or m.kv_slots * -(-m.max_seq
+                                                      // m.page_size)
+                self.arenas[m.name] = PagedKVArena(
+                    m.cfg, m.kv_slots, n_pages, m.page_size)
+                self._decode[m.name] = cached_paged_serve_step(m.cfg)
+            else:
+                self.arenas[m.name] = KVArena(m.cfg, m.kv_slots, m.max_seq)
+                self._decode[m.name] = cached_serve_step(m.cfg)
 
         self.residency = WeightResidencyManager(
             {m.name: (m.params, m.cfg) for m in models},
@@ -87,23 +114,46 @@ class ServingEngine:
         self._wall_s = 0.0   # cumulative time spent inside step()
 
     # ------------------------------------------------------------ intake
+    def _prefill_fn(self, name: str, prompt_len: int):
+        """Slot tenants prefill into a fixed max_seq cache; paged tenants
+        into a page-multiple bucket so installs write whole pages.  NB the
+        prompt itself is not padded, so jit still traces per prompt length
+        (same as the slot path) — bounding compile counts needs padded
+        prefill with masking (ROADMAP: prefill chunking/bucketing)."""
+        m = self.models[name]
+        arena = self.arenas[name]
+        if isinstance(arena, PagedKVArena):
+            bucket = arena.blocks_for(prompt_len) * arena.page_size
+            return cached_prefill_step(m.cfg, bucket)
+        return cached_prefill_step(m.cfg, m.max_seq)
+
+    def _capacity(self, model: str) -> int:
+        """Per-request token ceiling: max_seq for slot arenas, the whole
+        page pool for paged ones."""
+        arena = self.arenas[model]
+        if isinstance(arena, PagedKVArena):
+            return arena.max_tokens
+        return self.models[model].max_seq
+
     def submit(self, model: str, prompt: Sequence[int],
                max_new_tokens: int = 16,
-               arrival_t: Optional[float] = None) -> Request:
+               arrival_t: Optional[float] = None,
+               temperature: float = 0.0, top_k: int = 0,
+               seed: Optional[int] = None) -> Request:
         if model not in self.models:
             raise KeyError(f"unknown tenant {model!r}")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1: the prefill "
                              "itself produces the first token")
-        m = self.models[model]
         req = Request(rid=self._next_rid, model=model,
                       prompt=tuple(int(t) for t in prompt),
                       max_new_tokens=max_new_tokens,
+                      temperature=temperature, top_k=top_k, seed=seed,
                       arrival_t=self._clock() if arrival_t is None
                       else arrival_t)
         self._next_rid += 1
         self.requests[req.rid] = req
-        if req.prompt_len + max_new_tokens > m.max_seq:
+        if req.prompt_len + max_new_tokens > self._capacity(model):
             req.status = RequestStatus.REJECTED
             self.scheduler.rejected += 1
             return req
@@ -123,23 +173,61 @@ class ServingEngine:
         self.scheduler.requeue(req)
 
     # ------------------------------------------------------------- step
+    def _pick_token(self, req: Request, logits_row) -> int:
+        """Next token for `req` from its row of logits: greedy argmax by
+        default, seeded temperature/top-k sampling otherwise.  The sample
+        index is the request's generated count, so re-prefills after
+        preemption resample the exact same continuation."""
+        vocab = self.models[req.model].cfg.vocab
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits_row[:vocab]))
+        return sample_token(logits_row, vocab, temperature=req.temperature,
+                            top_k=req.top_k,
+                            key=request_key(req.seed, req.rid),
+                            step=len(req.generated))
+
     def _admit(self, allowed) -> int:
         """Admit queued requests of the scheduled (weight-resident) tenants
         only — a prefill never computes on a tenant whose layer codes are
-        not installed in the weight arena."""
+        not installed in the weight arena.  Slot tenants gate on a free
+        slot; paged tenants on a free decode row AND enough free pages for
+        the request's non-shared blocks."""
         free = {name: (arena.n_free if name in allowed else 0)
                 for name, arena in self.arenas.items()}
         n_active = sum(len(a.active_slots()) for a in self.arenas.values())
-        admits = self.scheduler.next_admits(free, n_active)
+
+        def can_admit(req: Request) -> bool:
+            arena = self.arenas[req.model]
+            if isinstance(arena, PagedKVArena):
+                return arena.can_admit(req.serving_prompt())
+            return True
+
+        admits = self.scheduler.next_admits(free, n_active, can_admit)
+        n_admitted = 0
         for req in admits:
             m = self.models[req.model]
             arena = self.arenas[req.model]
-            slot = arena.alloc(req.rid)
-            tokens = jnp.asarray(req.serving_prompt(), jnp.int32)[None]
-            logits, caches = self._prefill[req.model](m.params,
-                                                     {"tokens": tokens})
-            tok = int(jnp.argmax(logits[0, :m.cfg.vocab]))
-            arena.install(slot, caches, tok, len(req.serving_prompt()))
+            prompt = req.serving_prompt()
+            if isinstance(arena, PagedKVArena):
+                slot = arena.alloc(req.rid, prompt)
+                if slot is None:
+                    # an earlier admit this step consumed the pages the
+                    # pre-pop check saw; head-of-queue retry next step.
+                    # The request never ran, so it stays QUEUED (requeue's
+                    # PREEMPTED tag is for evicted progress).
+                    self.scheduler.requeue(req)
+                    req.status = RequestStatus.QUEUED
+                    continue
+            else:
+                slot = arena.alloc(req.rid)
+            tokens = jnp.asarray(prompt, jnp.int32)[None]
+            logits, caches = self._prefill_fn(req.model, len(prompt))(
+                m.params, {"tokens": tokens})
+            tok = self._pick_token(req, logits[0])
+            if isinstance(arena, PagedKVArena):
+                arena.install(slot, caches, tok, prompt)
+            else:
+                arena.install(slot, caches, tok, len(prompt))
             req.slot = slot
             req.status = RequestStatus.RUNNING
             req.generated.append(tok)
@@ -147,7 +235,8 @@ class ServingEngine:
                 req.first_token_t = self._clock()
             if req.done:
                 self._finish(req)
-        return len(admits)
+            n_admitted += 1
+        return n_admitted
 
     def _finish(self, req: Request) -> None:
         self.arenas[req.model].evict(req.slot)
@@ -173,6 +262,10 @@ class ServingEngine:
                            for a in self.arenas.values())
             if n_active >= budget:
                 return False
+        if isinstance(arena, PagedKVArena):
+            # a queued-only paged tenant needs pages, not just a row
+            return any(r.model == name and arena.can_admit(r.serving_prompt())
+                       for r in self.scheduler.queue)
         return any(r.model == name for r in self.scheduler.queue)
 
     def step(self) -> None:
@@ -193,29 +286,51 @@ class ServingEngine:
         for name in run_models:
             m = self.models[name]
             arena = self.arenas[name]
+            paged = isinstance(arena, PagedKVArena)
+            if paged:
+                # extend tables across page boundaries and COW shared pages
+                # before the step writes; pool exhaustion preempts (the
+                # request re-prefills once pages free up — ARAS-style
+                # adaptation to the occupancy map, not a hard failure)
+                for slot in arena.active_slots():
+                    if not arena.prepare_decode(slot):
+                        self.preempt(arena.owner_of(slot))
             slots = arena.active_slots()
             if not slots:
                 continue
-            tokens, pos = arena.decode_inputs()
-            logits, arena.caches = self._decode[name](
-                m.params, tokens, arena.caches, pos)
+            if paged:
+                tokens, pos, tables = arena.decode_inputs()
+                logits, arena.caches = self._decode[name](
+                    m.params, tokens, arena.caches, pos, tables)
+            else:
+                tokens, pos = arena.decode_inputs()
+                logits, arena.caches = self._decode[name](
+                    m.params, tokens, arena.caches, pos)
             nxt = np.asarray(jnp.argmax(logits[:, :m.cfg.vocab], axis=-1))
             for slot in slots:
                 req = self.requests[arena.owner_of(slot)]
-                tok = int(nxt[slot])
+                tok = (int(nxt[slot]) if req.temperature <= 0.0
+                       else self._pick_token(req, logits[slot]))
                 req.generated.append(tok)
                 arena.advance(slot, tok)
                 n_decoded += 1
                 if req.done:
                     self._finish(req)
 
+        kv_used = kv_total = 0
+        for arena in self.arenas.values():
+            if isinstance(arena, PagedKVArena):
+                kv_used += arena.allocator.n_used
+                kv_total += arena.allocator.n_pages
         self.metrics.record_step(StepRecord(
             t=now,
             n_active=sum(len(a.active_slots()) for a in self.arenas.values()),
             queue_depth=self.scheduler.queue_depth,
             n_prefills=n_prefills,
             n_decoded=n_decoded,
-            install_wire_bytes=wire))
+            install_wire_bytes=wire,
+            kv_used_pages=kv_used,
+            kv_total_pages=kv_total))
         self._step_no += 1
         self._wall_s += self._clock() - now
 
@@ -246,4 +361,23 @@ class ServingEngine:
         return self.metrics.summary(
             self._wall_s if wall_s is None else wall_s,
             residency=self.residency.stats.as_dict(),
-            rejected=self.scheduler.rejected)
+            rejected=self.scheduler.rejected,
+            paging=self._paging_stats())
+
+    def _paging_stats(self) -> Optional[Dict[str, float]]:
+        """Aggregate paged-arena stats across tenants (None when every
+        tenant is slot-managed).  Each shared-page hit is one page of KV
+        the pool never had to store or prefill twice."""
+        agg: Optional[Dict[str, float]] = None
+        for arena in self.arenas.values():
+            if isinstance(arena, PagedKVArena):
+                s = arena.stats()
+                if agg is None:
+                    agg = dict.fromkeys(s, 0.0)
+                for k, v in s.items():
+                    agg[k] += v
+        if agg is not None:
+            agg["kv_page_occupancy"] = (
+                agg["kv_pages_used"] / max(agg["kv_pages_total"], 1.0))
+            agg["kv_pages_saved"] = agg["kv_shared_page_hits"]
+        return agg

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import functools
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp

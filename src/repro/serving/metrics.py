@@ -24,6 +24,9 @@ class StepRecord:
     n_prefills: int
     n_decoded: int
     install_wire_bytes: int
+    # paged-KV occupancy snapshot (0/0 when every tenant is slot-managed)
+    kv_used_pages: int = 0
+    kv_total_pages: int = 0
 
 
 class EngineMetrics:
@@ -47,7 +50,9 @@ class EngineMetrics:
 
     def summary(self, wall_s: float,
                 residency: Optional[Dict[str, float]] = None,
-                rejected: int = 0) -> Dict[str, float]:
+                rejected: int = 0,
+                paging: Optional[Dict[str, float]] = None
+                ) -> Dict[str, float]:
         lat = [r.latency for r in self.finished if r.latency is not None]
         ttft = [r.ttft for r in self.finished if r.ttft is not None]
         depths = [s.queue_depth for s in self.steps]
@@ -69,6 +74,13 @@ class EngineMetrics:
         }
         if residency:
             out.update(residency)
+        if paging:
+            occ = [s.kv_used_pages / s.kv_total_pages
+                   for s in self.steps if s.kv_total_pages]
+            out.update(paging)
+            out["kv_page_occupancy_mean"] = (
+                float(np.mean(occ)) if occ else 0.0)
+            out["kv_page_occupancy_max"] = float(max(occ)) if occ else 0.0
         return out
 
 
@@ -87,6 +99,15 @@ def format_summary(s: Dict[str, float]) -> str:
         f"queue depth mean/max {s['queue_depth_mean']:.1f}/"
         f"{int(s['queue_depth_max'])}",
     ]
+    if "kv_pages_total" in s:
+        lines.append(
+            f"paged KV: occupancy mean/max "
+            f"{s['kv_page_occupancy_mean']:.1%}/"
+            f"{s['kv_page_occupancy_max']:.1%} of "
+            f"{int(s['kv_pages_total'])} pages, "
+            f"{int(s['kv_shared_page_hits'])} shared-page hits "
+            f"({int(s['kv_pages_saved'])} pages saved), "
+            f"{int(s['kv_cow_copies'])} COW copies")
     if "install_wire_bytes" in s:
         lines.append(
             f"weight installs: {int(s['installs'])} "

@@ -1,0 +1,432 @@
+"""Paged KV-cache subsystem: block page tables, prefix sharing, and COW.
+
+The slot arena (`kv_arena.py`) binds every request to a whole-sequence slot,
+so `max_seq` is a per-tenant constant and a 3-token request strands a full
+`max_seq` KV region.  This module brings the crossbar occupancy-map
+discipline of `sim/aras.py` down to *sub-sequence* granularity:
+
+  * `PageAllocator` — a host-side occupancy map over fixed-size KV pages:
+    free-list allocation, per-request page tables, refcounted prefix sharing
+    (identical token prefixes map to the same physical pages), and
+    copy-on-write when a shared page is about to diverge.  A freed page
+    keeps its stale device contents until the next occupant overwrites
+    them — correctness comes from position masks, exactly like a released
+    crossbar row.
+  * `PagedKVArena` — the device side: one page-pool cache pytree per tenant
+    (the `init_cache` layout with the batch axis reinterpreted as the page
+    axis) plus per-row decode state.  Requests address their KV through an
+    `(n_rows, n_pages)` page-table array consumed by the paged decode path
+    in `nn/attention.py`; a request may span any number of pages, so the
+    per-request ceiling is the whole pool, not a per-slot constant.
+
+Device page 0 is reserved as a scratch page: inactive decode rows keep
+all-zero page tables, so their (discarded) decode writes land in the
+scratch page instead of corrupting a reallocated neighbor.
+
+Prefix-sharing safety argument: a page registered under token prefix `t`
+holds valid K/V for every position `< len(t)`; later appends by the owner
+only add entries at *higher* positions, which any sharer masks out
+(`kpos <= pos`).  Sharing therefore stays sound even when the registered
+content grows — but a *write* into a page with refcount > 1 must COW first,
+because two requests appending different tokens at the same page offset
+would otherwise corrupt each other.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.config import ModelConfig
+from repro.nn.transformer import layer_kind, stack_plan
+
+
+class PageAllocator:
+    """Host-side occupancy map over `n_pages` KV pages of `page_size` tokens.
+
+    Physical page ids run 1..n_pages; id 0 is the arena's reserved scratch
+    page and is never handed out."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError("need n_pages >= 1 and page_size >= 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: deque = deque(range(1, n_pages + 1))
+        self.refcount = np.zeros(n_pages + 1, np.int32)
+        self.tables: Dict[int, List[int]] = {}      # rid -> physical pages
+        # prefix index: token-prefix tuple -> page holding its last block
+        self._index: Dict[Tuple[int, ...], int] = {}
+        self._page_key: Dict[int, Tuple[int, ...]] = {}
+        # lifetime stats
+        self.pages_allocated = 0
+        self.shared_hits = 0
+        self.cow_copies = 0
+
+    # ------------------------------------------------------------- sizing
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.n_used / self.n_pages
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(-(-n_tokens // self.page_size), 1)
+
+    # ---------------------------------------------------------- low level
+    def _alloc_page(self) -> int:
+        page = self._free.popleft()
+        self.refcount[page] = 1
+        self.pages_allocated += 1
+        return page
+
+    def free_page(self, page: int) -> None:
+        """Drop one reference; the page returns to the free list (contents
+        left stale on device) only when the last holder lets go."""
+        if self.refcount[page] <= 0:
+            raise ValueError(f"double free of page {page}")
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            key = self._page_key.pop(page, None)
+            if key is not None:
+                self._index.pop(key, None)
+            self._free.append(page)
+
+    # ------------------------------------------------------ prefix sharing
+    def match_prefix(self, tokens: Tuple[int, ...]) -> List[int]:
+        """Longest chain of resident pages whose registered token prefixes
+        match `tokens` block by block.  Full blocks match on the full
+        block-boundary prefix; the final partial block matches only a page
+        registered under exactly `tokens` (a page holding *more* than the
+        lookup key would require mid-page writes during prefill, where
+        sharing buys nothing over writing a fresh page).
+
+        Keys are exact full-prefix tuples, so one call costs O(blocks·len)
+        tuple hashing — quadratic in prompt length.  Fine at serving-prompt
+        scale here; long-context sharing wants parent-page hash chains with
+        cascade invalidation (vLLM-style) before this goes near 10k-token
+        prompts."""
+        shared: List[int] = []
+        n = len(tokens)
+        for i in range(self.blocks_for(n)):
+            end = min((i + 1) * self.page_size, n)
+            page = self._index.get(tuple(tokens[:end]))
+            if page is None:
+                break
+            shared.append(page)
+        return shared
+
+    def register(self, rid: int, tokens: Tuple[int, ...]) -> None:
+        """Publish a freshly installed table's pages under their token
+        prefixes so later requests can share them.  First writer wins; a
+        page is only ever indexed under one key."""
+        table = self.tables[rid]
+        n = len(tokens)
+        for i, page in enumerate(table):
+            end = min((i + 1) * self.page_size, n)
+            key = tuple(tokens[:end])
+            if key not in self._index and page not in self._page_key:
+                self._index[key] = page
+                self._page_key[page] = key
+
+    # ------------------------------------------------------ request level
+    def alloc_table(self, rid: int, tokens: Tuple[int, ...]
+                    ) -> Optional[Tuple[List[int], int]]:
+        """Build rid's page table over `tokens`: refcount shared prefix
+        pages, allocate fresh pages for the rest.  Returns (table,
+        n_shared), or None *with no side effects* when the pool cannot
+        cover the non-shared tail."""
+        if rid in self.tables:
+            raise ValueError(f"rid {rid} already holds a table")
+        n_blocks = self.blocks_for(len(tokens))
+        shared = self.match_prefix(tokens)
+        if n_blocks - len(shared) > self.n_free:
+            return None
+        for page in shared:
+            self.refcount[page] += 1
+            self.shared_hits += 1
+        table = list(shared)
+        for _ in range(n_blocks - len(shared)):
+            table.append(self._alloc_page())
+        self.tables[rid] = table
+        return table, len(shared)
+
+    def extend(self, rid: int) -> Optional[int]:
+        """Append one fresh page to rid's table (decode crossed a page
+        boundary).  None when the pool is exhausted — the caller preempts."""
+        if not self._free:
+            return None
+        page = self._alloc_page()
+        self.tables[rid].append(page)
+        return page
+
+    def cow(self, rid: int, block: int) -> Optional[Tuple[int, int]]:
+        """Make rid's `block` exclusively owned before a write.  Returns
+        (src, dst) when a device page copy is required, (page, page) when
+        the page was already exclusive, None when the pool is exhausted."""
+        old = self.tables[rid][block]
+        if self.refcount[old] <= 1:
+            return old, old
+        if not self._free:
+            return None
+        new = self._alloc_page()
+        self.free_page(old)          # our ref only; other holders keep it
+        self.tables[rid][block] = new
+        self.cow_copies += 1
+        return old, new
+
+    def free_table(self, rid: int) -> None:
+        for page in self.tables.pop(rid):
+            self.free_page(page)
+
+
+# ---------------------------------------------------------------- device
+def init_page_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                   dtype=jnp.bfloat16):
+    """Page-pool cache pytree: `nn.model.init_cache` with the batch axis
+    reinterpreted as the page axis, except windowed layers keep full pages
+    (the paged decode path masks the window instead of ring-indexing)."""
+
+    def attn_entry():
+        if cfg.attn_type == "mla":
+            return {
+                "c_kv": jnp.zeros((n_pages, page_size, cfg.kv_lora_rank),
+                                  dtype),
+                "k_rope": jnp.zeros((n_pages, page_size, cfg.qk_rope_dim),
+                                    dtype),
+            }
+        kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+        out = {
+            "k": jnp.zeros((n_pages, page_size, cfg.n_kv_heads,
+                            cfg.head_dim), kv_dt),
+            "v": jnp.zeros((n_pages, page_size, cfg.n_kv_heads,
+                            cfg.head_dim), kv_dt),
+        }
+        if cfg.kv_cache_dtype == "int8":
+            out["k_scale"] = jnp.zeros(
+                (n_pages, page_size, cfg.n_kv_heads), jnp.float32)
+            out["v_scale"] = jnp.zeros_like(out["k_scale"])
+        return out
+
+    caches = []
+    for start, length, scanned in stack_plan(cfg):
+        one: Any = {"attn": attn_entry()}
+        if scanned:
+            one = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (length,) + a.shape), one)
+        caches.append(one)
+    return caches
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_page_write(cfg: ModelConfig, page_size: int):
+    """Jitted page scatter shared across arenas of one config: copy logical
+    block `block` of a batch-1 prefill cache into physical page `page` of
+    the pool.  The pool is donated — install() immediately rebinds
+    self.caches, so the write is in place."""
+    plan = stack_plan(cfg)
+
+    def write(pool, one, block, page):
+        out = []
+        for seg_pool, seg_one, (_, _, scanned) in zip(pool, one, plan):
+            def upd(a, o, scanned=scanned):
+                if scanned:  # a (L, P, ps, ...), o (L, 1, Lbuf, ...)
+                    chunk = jax.lax.dynamic_slice_in_dim(
+                        o[:, 0], block * page_size, page_size, axis=1)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        a, chunk[:, None].astype(a.dtype), page, axis=1)
+                chunk = jax.lax.dynamic_slice_in_dim(
+                    o[0], block * page_size, page_size, axis=0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    a, chunk[None].astype(a.dtype), page, axis=0)
+            out.append(jax.tree.map(upd, seg_pool, seg_one))
+        return out
+
+    return jax.jit(write, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_page_copy(cfg: ModelConfig):
+    """Jitted COW page copy: pool page `src` -> pool page `dst`."""
+    plan = stack_plan(cfg)
+
+    def copy(pool, src, dst):
+        out = []
+        for seg, (_, _, scanned) in zip(pool, plan):
+            ax = 1 if scanned else 0
+            out.append(jax.tree.map(
+                lambda a, ax=ax: jax.lax.dynamic_update_slice_in_dim(
+                    a, jax.lax.dynamic_slice_in_dim(a, src, 1, axis=ax),
+                    dst, axis=ax),
+                seg))
+        return out
+
+    return jax.jit(copy, donate_argnums=(0,))
+
+
+class PagedKVArena:
+    """Device page pool + per-row decode state for one tenant.
+
+    Rows are decode-batch positions (the jitted decode step always runs
+    `n_rows` rows; inactive rows decode discarded garbage against the
+    reserved scratch page).  Pages are the storage unit: a request holds
+    ceil(len/page_size) of them, up to the whole pool."""
+
+    layout = "paged"
+
+    def __init__(self, cfg: ModelConfig, n_rows: int, n_pages: int,
+                 page_size: int):
+        for start, _, _ in stack_plan(cfg):
+            if layer_kind(cfg, start) != "attn":
+                raise ValueError(
+                    "paged KV needs a pure-attention stack; "
+                    f"layer {start} of {cfg.name} is "
+                    f"{layer_kind(cfg, start)!r} (use kv_layout='slot')")
+        self.cfg = cfg
+        self.n_rows = n_rows
+        self.page_size = page_size
+        self.allocator = PageAllocator(n_pages, page_size)
+        self.caches = init_page_pool(cfg, n_pages + 1, page_size)
+        self.owner: List[Optional[int]] = [None] * n_rows
+        self.pos = np.zeros(n_rows, np.int32)
+        self.last_token = np.zeros(n_rows, np.int32)
+        # page-table rows consumed by the decode step; 0 = scratch page
+        self.tables_np = np.zeros((n_rows, n_pages), np.int32)
+        self._n_shared: Dict[int, int] = {}   # rid -> shared prefix pages
+        self._free_rows: deque = deque(range(n_rows))
+        self._write = _cached_page_write(cfg, page_size)
+        self._copy = _cached_page_copy(cfg)
+        self.evictions = 0
+
+    # ------------------------------------------------------------ sizing
+    @property
+    def max_tokens(self) -> int:
+        """Per-request ceiling: the whole pool (not a per-slot constant)."""
+        return self.allocator.n_pages * self.page_size
+
+    @property
+    def n_free(self) -> int:
+        """Free decode rows (the scheduler's per-tenant admission count)."""
+        return len(self._free_rows)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return self.allocator.blocks_for(n_tokens)
+
+    def can_admit(self, tokens: Tuple[int, ...]) -> bool:
+        """Enough free pages for the non-shared tail, and a free row."""
+        if not self._free_rows:
+            return False
+        need = self.blocks_for(len(tokens))
+        if need <= self.allocator.n_free:
+            return True     # fits even with zero sharing: skip the
+            # O(blocks·len) prefix match on the hot scheduling path
+        need -= len(self.allocator.match_prefix(tuple(tokens)))
+        return need <= self.allocator.n_free
+
+    # ------------------------------------------------------------- rows
+    def active_slots(self) -> List[int]:
+        return [r for r, o in enumerate(self.owner) if o is not None]
+
+    def owner_of(self, row: int) -> Optional[int]:
+        return self.owner[row]
+
+    def alloc(self, rid: int, tokens: Tuple[int, ...]) -> Optional[int]:
+        """Claim a row and a page table covering `tokens`; None (no side
+        effects) when rows or pages are short."""
+        if not self._free_rows:
+            return None
+        got = self.allocator.alloc_table(rid, tuple(tokens))
+        if got is None:
+            return None
+        table, n_shared = got
+        row = self._free_rows.popleft()
+        self.owner[row] = rid
+        self._n_shared[rid] = n_shared
+        self.tables_np[row, :] = 0
+        self.tables_np[row, :len(table)] = table
+        return row
+
+    def evict(self, row: int) -> Optional[int]:
+        """Release a row (finish or preemption): refcounts drop, pages whose
+        last holder left return to the free list with stale contents."""
+        rid = self.owner[row]
+        if rid is None:
+            return None
+        self.allocator.free_table(rid)
+        self._n_shared.pop(rid, None)
+        self.owner[row] = None
+        self.tables_np[row, :] = 0
+        self._free_rows.append(row)
+        self.evictions += 1
+        return rid
+
+    # ------------------------------------------------------------ caches
+    def install(self, row: int, one_caches: Any, first_token: int,
+                tokens: Tuple[int, ...]) -> None:
+        """Scatter a freshly prefilled batch-1 cache into this row's
+        non-shared pages (shared prefix pages already hold identical K/V),
+        publish the pages for future sharing, and arm decode state."""
+        rid = self.owner[row]
+        table = self.allocator.tables[rid]
+        for i in range(self._n_shared[rid], len(table)):
+            self.caches = self._write(self.caches, one_caches,
+                                      jnp.int32(i), jnp.int32(table[i]))
+        self.allocator.register(rid, tuple(tokens))
+        self.pos[row] = len(tokens)
+        self.last_token[row] = first_token
+
+    def prepare_decode(self, row: int) -> bool:
+        """Before a decode step writes this row's token at `pos`: extend the
+        table if `pos` crossed into a new block, and COW the target page if
+        it is shared.  False when the pool is exhausted (caller preempts)."""
+        rid = self.owner[row]
+        table = self.allocator.tables[rid]
+        block = int(self.pos[row]) // self.page_size
+        if block >= self.tables_np.shape[1]:
+            return False               # request outgrew the whole pool
+        if block == len(table):
+            page = self.allocator.extend(rid)
+            if page is None:
+                return False
+            self.tables_np[row, block] = page
+            return True
+        got = self.allocator.cow(rid, block)
+        if got is None:
+            return False
+        src, dst = got
+        if src != dst:
+            self.caches = self._copy(self.caches, jnp.int32(src),
+                                     jnp.int32(dst))
+            self.tables_np[row, block] = dst
+        return True
+
+    def decode_inputs(self):
+        """(tokens (R,), pos (R,), tables (R, n_pages)) covering every row;
+        inactive rows carry stale state aimed at the scratch page."""
+        return (jnp.asarray(self.last_token), jnp.asarray(self.pos),
+                jnp.asarray(self.tables_np))
+
+    def advance(self, row: int, token: int) -> None:
+        self.pos[row] += 1
+        self.last_token[row] = token
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, float]:
+        a = self.allocator
+        return {
+            "kv_pages_total": float(a.n_pages),
+            "kv_pages_used": float(a.n_used),
+            "kv_page_occupancy": a.occupancy(),
+            "kv_pages_allocated": float(a.pages_allocated),
+            "kv_shared_page_hits": float(a.shared_hits),
+            "kv_cow_copies": float(a.cow_copies),
+        }

@@ -26,6 +26,12 @@ class Request:
     prompt: Tuple[int, ...]
     max_new_tokens: int
     arrival_t: float
+    # sampling: temperature <= 0 is greedy argmax (the default); otherwise
+    # temperature/top-k sampling from fold_in(PRNGKey(seed or rid), n) for
+    # the n-th generated token (deterministic across schedules).
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: Optional[int] = None
     status: RequestStatus = RequestStatus.QUEUED
     slot: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)

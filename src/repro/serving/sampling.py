@@ -1,0 +1,38 @@
+"""Token sampling for the serving engine: greedy by default, temperature /
+top-k with a seeded per-request PRNG key otherwise.
+
+Determinism contract: a request's n-th generated token depends only on
+(logits, seed, n) — the key is `fold_in(PRNGKey(seed), n)` — so identical
+requests through any engine schedule (continuous batch, preemption and
+re-prefill, paged vs slot layout) sample identical tokens.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def request_key(seed: Optional[int], rid: int) -> jax.Array:
+    """Per-request PRNG root: the explicit seed, else the rid (stable across
+    re-admissions — the rid never changes)."""
+    return jax.random.PRNGKey(rid if seed is None else seed)
+
+
+def sample_token(logits: jax.Array, vocab: int, *, temperature: float = 0.0,
+                 top_k: int = 0, key: Optional[jax.Array] = None,
+                 step: int = 0) -> int:
+    """One token from a single row of next-token logits (≥ vocab wide;
+    padded tail ignored).  temperature <= 0 is greedy argmax — the engine's
+    default, token-for-token identical to the pre-sampling behavior."""
+    logits = logits[:vocab]
+    if temperature <= 0.0:
+        return int(jnp.argmax(logits))
+    if key is None:
+        raise ValueError("temperature sampling needs a PRNG key")
+    scaled = logits.astype(jnp.float32) / temperature
+    if 0 < top_k < vocab:
+        kth = jax.lax.top_k(scaled, top_k)[0][-1]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return int(jax.random.categorical(jax.random.fold_in(key, step), scaled))

@@ -12,7 +12,7 @@ install-amortization discipline applied across models.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.serving.request import Request, RequestStatus
 
@@ -57,10 +57,14 @@ class StepScheduler:
         req.status = RequestStatus.PREEMPTED
         self.queue.insert(0, req)
 
-    def next_admits(self, free_slots: Dict[str, int], n_active: int
+    def next_admits(self, free_slots: Dict[str, int], n_active: int,
+                    can_admit: Optional[Callable[[Request], bool]] = None
                     ) -> List[Request]:
         """Pop up to `max_prefill_per_step` requests that have a free KV
-        slot in their tenant's arena and fit the global active budget."""
+        slot (slot arenas) or decode row (paged arenas) in their tenant's
+        arena and fit the global active budget.  `can_admit` adds the
+        paged-layout page check — "enough free pages for this request's
+        non-shared blocks?" — on top of the per-tenant row count."""
         budget = (float("inf") if self.cfg.max_active is None
                   else self.cfg.max_active)
         order = list(self.queue)
@@ -78,6 +82,8 @@ class StepScheduler:
             if n_active + len(admits) >= budget:
                 break
             if free.get(req.model, 0) <= 0:
+                continue
+            if can_admit is not None and not can_admit(req):
                 continue
             free[req.model] -= 1
             admits.append(req)

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.bank_selection import Bank, BankSelection, make_banks, select_banks
 from repro.core.layer_graph import LayerGraph, LayerNode
-from repro.core.replication import LayerCost, WriteItem, plan_writes
+from repro.core.replication import LayerCost, plan_writes
 from repro.core.resources import AcceleratorConfig
 from repro.core.weight_reuse import (
     ERASED_HIST,

@@ -13,7 +13,7 @@ equal MSB cells across layers and therefore the skip ratio.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -11,6 +11,8 @@ from repro.kernels.delta_apply.ops import apply_delta
 from repro.kernels.delta_apply.ref import delta_apply_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.pulse_count.ops import pulse_count
 from repro.kernels.pulse_count.ref import pulse_count_ref
 
@@ -69,3 +71,50 @@ def test_flash_attention_kernel_sweep(s, d, causal, dtype):
     tol = 2e-2 if dtype == jnp.bfloat16 else 3e-4
     np.testing.assert_allclose(np.asarray(o, np.float32),
                                np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,d,pool,page,t",
+                         [(3, 4, 2, 32, 9, 4, 6),    # GQA, odd pool
+                          (2, 6, 6, 16, 5, 8, 4),    # MHA
+                          (1, 8, 2, 64, 12, 16, 8)])  # single row, big page
+def test_paged_attention_kernel_sweep(b, h, hkv, d, pool, page, t, dtype):
+    """Decode through scattered page tables must match the gather oracle,
+    including rows whose position sits mid-page (masked tail)."""
+    rng = np.random.default_rng(b * pool + page)
+    q = jnp.asarray(rng.standard_normal((b, h, d)), dtype)
+    kp = jnp.asarray(rng.standard_normal((pool, page, hkv, d)), dtype)
+    vp = jnp.asarray(rng.standard_normal((pool, page, hkv, d)), dtype)
+    tables = jnp.asarray(
+        np.stack([rng.choice(pool, t, replace=False) for _ in range(b)]),
+        jnp.int32)
+    pos = jnp.asarray(rng.integers(0, t * page, b), jnp.int32)
+    o = paged_attention(q, kp, vp, tables, pos)
+    r = paged_attention_ref(q, kp, vp, tables, pos)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), rtol=tol, atol=tol)
+
+
+def test_paged_attention_masks_stale_pages():
+    """Pages past a row's position may hold arbitrary stale garbage (the
+    freed-page occupancy discipline) without perturbing the output."""
+    rng = np.random.default_rng(7)
+    b, h, hkv, d, pool, page, t = 2, 4, 2, 16, 10, 4, 5
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kp = np.asarray(rng.standard_normal((pool, page, hkv, d)), np.float32)
+    vp = np.asarray(rng.standard_normal((pool, page, hkv, d)), np.float32)
+    # disjoint tables: a page stale for one row must not be live in another
+    tables = rng.permutation(pool).reshape(b, t)
+    pos = np.asarray([5, 9])
+    base = paged_attention(q, jnp.asarray(kp), jnp.asarray(vp),
+                           jnp.asarray(tables, np.int32),
+                           jnp.asarray(pos, np.int32))
+    for row in range(b):
+        for blk in range(pos[row] // page + 1, t):
+            kp[tables[row, blk]] = 1e4 * rng.standard_normal((page, hkv, d))
+            vp[tables[row, blk]] = 1e4
+    out = paged_attention(q, jnp.asarray(kp), jnp.asarray(vp),
+                          jnp.asarray(tables, np.int32),
+                          jnp.asarray(pos, np.int32))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))

@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.xbar.cells import (
     CELLS_PER_WEIGHT,
-    cell_deltas,
     cell_similarity,
     pack_cells,
     pulse_count,
@@ -16,7 +15,6 @@ from repro.xbar.cells import (
     unpack_cells,
 )
 from repro.xbar.quant import (
-    QuantParams,
     dequantize,
     dot_int8,
     quantize_tensor,

@@ -25,8 +25,8 @@ from repro.nn.model import init_params
 
 def _run_engine(args) -> None:
     """Continuous batching across ≥ 2 tenants on one device budget."""
-    from repro.serving import (EngineModel, SchedulerConfig, ServingEngine,
-                               format_summary)
+    from repro.serving import (EngineModel, InstallCostModel, SchedulerConfig,
+                               ServingEngine, format_summary)
     from repro.serving.variants import perturbed_variant
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -49,7 +49,11 @@ def _run_engine(args) -> None:
         tenants, weight_arena_slots=weight_slots,
         sched=SchedulerConfig(max_prefill_per_step=4,
                               model_turn_steps=args.turn_steps,
-                              policy=args.queue_policy))
+                              policy=args.queue_policy),
+        install_ticks_per_step=args.install_ticks_per_step,
+        overlap_installs=args.overlap_installs,
+        install_cost=InstallCostModel(
+            bytes_per_tick=args.install_bytes_per_tick))
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -91,6 +95,15 @@ def main() -> None:
                         "ceiling)")
     p.add_argument("--page-size", type=int, default=8,
                    help="engine: tokens per KV page (kv_layout=paged)")
+    p.add_argument("--install-ticks-per-step", type=int, default=0,
+                   help="engine: weight-install tick budget per step "
+                        "(0 = instant installs at the turn boundary)")
+    p.add_argument("--install-bytes-per-tick", type=int, default=1 << 16,
+                   help="engine: wire bytes one install tick moves")
+    p.add_argument("--overlap-installs", action="store_true",
+                   help="engine: pipeline the next tenant's weight installs "
+                        "under the current tenant's final decode steps "
+                        "(needs --install-ticks-per-step > 0)")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -1,20 +1,24 @@
 """Continuous-batching serving engine (ARAS scheduling machinery applied to
 multi-tenant inference): request queue + admission control, slot-managed or
 paged KV-cache arenas (block page tables, refcounted prefix sharing, COW),
-multi-model weight-arena residency with cross-tenant §V-C delta reuse, and
-an engine metrics surface."""
+multi-model weight-arena residency with cross-tenant §V-C delta reuse and a
+tick-budgeted install pipeline that overlaps tenant switches with decode,
+and an engine metrics surface (drivable on a deterministic VirtualClock)."""
 from repro.serving.engine import EngineModel, ServingEngine
+from repro.serving.harness import drive_simulated
 from repro.serving.kv_arena import KVArena
-from repro.serving.metrics import EngineMetrics, format_summary
+from repro.serving.metrics import EngineMetrics, VirtualClock, format_summary
 from repro.serving.paging import PageAllocator, PagedKVArena
 from repro.serving.request import Request, RequestStatus
-from repro.serving.residency import WeightResidencyManager
+from repro.serving.residency import InstallPipeline, WeightResidencyManager
 from repro.serving.sampling import request_key, sample_token
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
+from repro.streaming.plan import InstallCostModel
 
 __all__ = [
     "EngineModel", "ServingEngine", "KVArena", "PageAllocator",
-    "PagedKVArena", "EngineMetrics", "format_summary", "Request",
-    "RequestStatus", "WeightResidencyManager", "SchedulerConfig",
-    "StepScheduler", "request_key", "sample_token",
+    "PagedKVArena", "EngineMetrics", "VirtualClock", "format_summary",
+    "Request", "RequestStatus", "InstallPipeline", "InstallCostModel",
+    "WeightResidencyManager", "SchedulerConfig", "StepScheduler",
+    "drive_simulated", "request_key", "sample_token",
 ]

@@ -17,8 +17,14 @@ on a fixed device budget:
   * a `WeightResidencyManager` decides which tenant's quantized layer codes
     occupy the device weight slots, delta-installing on tenant switches and
     reporting wire bytes saved by §V-C cross-tenant reuse;
-  * `EngineMetrics` aggregates p50/p95 latency, tokens/s, queue depth and
-    install traffic.
+  * with `install_ticks_per_step > 0` those installs run through an
+    `InstallPipeline` under a per-step tick budget, and `overlap_installs`
+    starts the next turn holder's installs while the current one still
+    decodes (ARAS §IV: hide weight writes under compute) — steps a tenant
+    spends blocked on installs are counted as `install_stall_steps`, bytes
+    pumped while tokens flowed as `overlap_hidden_bytes`;
+  * `EngineMetrics` aggregates p50/p95 latency, tokens/s, queue depth,
+    worst inter-token gaps, and install traffic.
 
 For dense GQA tenants decode outputs are token-for-token identical to the
 sequential prefill + `make_serve_step` loop (tests/test_serving.py asserts
@@ -43,9 +49,10 @@ from repro.serving.kv_arena import KVArena
 from repro.serving.metrics import EngineMetrics, StepRecord
 from repro.serving.paging import PagedKVArena
 from repro.serving.request import Request, RequestStatus
-from repro.serving.residency import WeightResidencyManager
+from repro.serving.residency import InstallPipeline, WeightResidencyManager
 from repro.serving.sampling import request_key, sample_token
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
+from repro.streaming.plan import InstallCostModel
 
 
 @dataclasses.dataclass
@@ -76,7 +83,10 @@ class ServingEngine:
                  sched: SchedulerConfig = SchedulerConfig(),
                  weight_arena_slots: Optional[int] = None,
                  reuse: bool = True,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 install_ticks_per_step: int = 0,
+                 overlap_installs: bool = False,
+                 install_cost: Optional[InstallCostModel] = None):
         if not models:
             raise ValueError("need at least one tenant model")
         names = [m.name for m in models]
@@ -112,6 +122,23 @@ class ServingEngine:
         self._next_rid = 0
         self._step_no = 0
         self._wall_s = 0.0   # cumulative time spent inside step()
+
+        # Install pipelining: install_ticks_per_step > 0 budgets weight-arena
+        # installs (one tick = install_cost.bytes_per_tick wire bytes per
+        # step, the DMA a step can hide); 0 keeps the legacy instant
+        # ensure() at the turn boundary.  overlap_installs additionally
+        # prefetches the next turn holder's layers while the current one
+        # still decodes — free slots mid-turn, the holder's own slots behind
+        # the execution front on its final slice step.
+        self.install_cost = install_cost or InstallCostModel()
+        self._ticks_per_step = int(install_ticks_per_step)
+        self._overlap = bool(overlap_installs)
+        if self._overlap and self._ticks_per_step <= 0:
+            raise ValueError("overlap_installs needs install_ticks_per_step "
+                             "> 0 (unbudgeted installs have nothing to hide)")
+        self.pipeline: Optional[InstallPipeline] = (
+            InstallPipeline(self.residency, self.install_cost)
+            if self._ticks_per_step > 0 else None)
 
     # ------------------------------------------------------------ intake
     def _prefill_fn(self, name: str, prompt_len: int):
@@ -231,6 +258,7 @@ class ServingEngine:
             req.slot = slot
             req.status = RequestStatus.RUNNING
             req.generated.append(tok)
+            req.note_token(self._clock())
             if req.first_token_t is None:
                 req.first_token_t = self._clock()
             if req.done:
@@ -268,22 +296,74 @@ class ServingEngine:
                        for r in self.scheduler.queue)
         return any(r.model == name for r in self.scheduler.queue)
 
+    def _pump_installs(self, run_models, demand) -> tuple:
+        """Budgeted install path: grant this step's tick budget to the
+        install pipeline.  Returns (decodable tenants, wire bytes committed,
+        wire bytes of install stream processed)."""
+        decodable = [n for n in run_models if self.residency.is_resident(n)]
+        blocked = [n for n in run_models if n not in decodable]
+        for name in decodable:
+            self.residency.touch(name, self._step_no)
+        target = blocked[0] if blocked else None
+        if target is None and self._overlap:
+            # the turn schedule names the next tenant: prefetch its layers
+            # while the current holder still decodes
+            nxt = self.scheduler.peek_next_model(demand)
+            if (nxt is not None and nxt not in run_models
+                    and not self.residency.is_resident(nxt)):
+                target = nxt
+        if target is None:
+            return decodable, 0, 0
+        self.pipeline.begin(target, self._step_no)
+        pinned = set(decodable) | {target}
+        holder = self.scheduler.current_turn_model
+        if (self.scheduler.turn_ending and holder is not None
+                and holder != target and self._steal_ok(target)):
+            # the holder's final slice step: its slots free up behind the
+            # execution front, so installs may overwrite them mid-step —
+            # streaming/executor.py's per-layer overlap at the tenant scale
+            pinned.discard(holder)
+        wire, work = self.pipeline.pump(self._ticks_per_step, pinned,
+                                        self._step_no)
+        return decodable, wire, work
+
+    def _steal_ok(self, target: str) -> bool:
+        """Steal the ending turn holder's slots only when the prefetch
+        target can actually take the next turn: it already decodes, or the
+        global active budget leaves admission headroom even after this
+        step's prefills.  A queued-only target behind an exhausted budget
+        may drop out of demand next step — stealing for it would hand the
+        turn straight back to the tenant whose layers we just evicted."""
+        if self.arenas[target].active_slots():
+            return True
+        budget = self.scheduler.cfg.max_active
+        if budget is None:
+            return True
+        n_active = sum(len(a.active_slots()) for a in self.arenas.values())
+        return (n_active + self.scheduler.cfg.max_prefill_per_step) < budget
+
     def step(self) -> None:
         """One engine step: pick the scheduled tenants (by demand — active
-        slots or queued requests), make their weights resident, admit+prefill
-        their queued requests, then decode one token for every active slot."""
+        slots or queued requests), make their weights resident (instantly,
+        or via the budgeted install pipeline), admit+prefill their queued
+        requests, then decode one token for every active slot."""
         now = self._clock()
         demand = [name for name in self.models if self._can_progress(name)]
         run_models = self.scheduler.pick_models(demand, self.residency)
         wire = 0
-        for name in run_models:
-            wire += self.residency.ensure(name, self._step_no,
-                                          pinned=set(run_models))
+        work = 0
+        if self.pipeline is None:
+            for name in run_models:
+                wire += self.residency.ensure(name, self._step_no,
+                                              pinned=set(run_models))
+            decodable = list(run_models)
+        else:
+            decodable, wire, work = self._pump_installs(run_models, demand)
 
-        n_prefills = self._admit(set(run_models))
+        n_prefills = self._admit(set(decodable))
 
         n_decoded = 0
-        for name in run_models:
+        for name in decodable:
             m = self.models[name]
             arena = self.arenas[name]
             paged = isinstance(arena, PagedKVArena)
@@ -312,10 +392,19 @@ class ServingEngine:
                 tok = (int(nxt[slot]) if req.temperature <= 0.0
                        else self._pick_token(req, logits[slot]))
                 req.generated.append(tok)
+                req.note_token(self._clock())
                 arena.advance(slot, tok)
                 n_decoded += 1
                 if req.done:
                     self._finish(req)
+
+        tokens_out = n_decoded + n_prefills
+        stall = (bool(run_models) and len(decodable) < len(run_models)
+                 and tokens_out == 0)
+        if stall:
+            # the step produced nothing because the scheduled tenant sat
+            # waiting on installs — don't charge it a decode-slice step
+            self.scheduler.refund_turn_step()
 
         kv_used = kv_total = 0
         for arena in self.arenas.values():
@@ -330,7 +419,10 @@ class ServingEngine:
             n_decoded=n_decoded,
             install_wire_bytes=wire,
             kv_used_pages=kv_used,
-            kv_total_pages=kv_total))
+            kv_total_pages=kv_total,
+            install_work_bytes=work,
+            overlap_hidden_bytes=work if tokens_out > 0 else 0,
+            install_stall=stall))
         self._step_no += 1
         self._wall_s += self._clock() - now
 
@@ -346,8 +438,13 @@ class ServingEngine:
             if max_steps is not None and self._step_no >= max_steps:
                 break
             before = self.metrics.tokens_generated
+            ticks_before = self.pipeline.pumped_ticks if self.pipeline else 0
             self.step()
-            stall = stall + 1 if self.metrics.tokens_generated == before else 0
+            progressed = (
+                self.metrics.tokens_generated != before
+                or (self.pipeline is not None
+                    and self.pipeline.pumped_ticks != ticks_before))
+            stall = 0 if progressed else stall + 1
             if stall > 3:
                 raise RuntimeError(
                     "engine stalled: queued work but no admissible slots")

@@ -16,6 +16,24 @@ def _pct(xs: List[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), p))
 
 
+class VirtualClock:
+    """Injectable simulated time for the engine's `clock` hook: the test
+    harness and benchmarks advance it explicitly per step, making every
+    latency/stall metric deterministic — no device, no wall clock."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError("virtual time cannot run backwards")
+        self.t += dt
+        return self.t
+
+
 @dataclasses.dataclass
 class StepRecord:
     t: float
@@ -27,6 +45,13 @@ class StepRecord:
     # paged-KV occupancy snapshot (0/0 when every tenant is slot-managed)
     kv_used_pages: int = 0
     kv_total_pages: int = 0
+    # install-pipeline accounting (all zero on the unbudgeted ensure() path):
+    # wire bytes of install stream pumped this step (partial installs
+    # included), how much of it was hidden under decode/prefill compute, and
+    # whether a scheduled tenant sat blocked on installs with no tokens out.
+    install_work_bytes: int = 0
+    overlap_hidden_bytes: int = 0
+    install_stall: bool = False
 
 
 class EngineMetrics:
@@ -55,6 +80,7 @@ class EngineMetrics:
                 ) -> Dict[str, float]:
         lat = [r.latency for r in self.finished if r.latency is not None]
         ttft = [r.ttft for r in self.finished if r.ttft is not None]
+        itl = [r.max_itl for r in self.finished if r.max_itl is not None]
         depths = [s.queue_depth for s in self.steps]
         out = {
             "requests_finished": float(len(self.finished)),
@@ -65,11 +91,21 @@ class EngineMetrics:
             "latency_p95_s": _pct(lat, 95),
             "ttft_p50_s": _pct(ttft, 50),
             "ttft_p95_s": _pct(ttft, 95),
+            # worst inter-token gap per request: the tenant-boundary stall a
+            # mean latency hides (install stalls land exactly here)
+            "itl_max_p50_s": _pct(itl, 50),
+            "itl_max_p95_s": _pct(itl, 95),
             "queue_depth_mean": float(np.mean(depths)) if depths else 0.0,
             "queue_depth_max": float(max(depths)) if depths else 0.0,
             "max_concurrent": float(self.max_concurrent),
             "preemptions": float(self.preemptions),
             "steps": float(len(self.steps)),
+            "install_stall_steps": float(
+                sum(1 for s in self.steps if s.install_stall)),
+            "install_work_bytes": float(
+                sum(s.install_work_bytes for s in self.steps)),
+            "overlap_hidden_bytes": float(
+                sum(s.overlap_hidden_bytes for s in self.steps)),
             "wall_s": wall_s,
         }
         if residency:
@@ -116,4 +152,13 @@ def format_summary(s: Dict[str, float]) -> str:
             f"{s['install_raw_bytes']/1e6:.2f} MB raw "
             f"(saved {s['install_savings']:.1%}, "
             f"skip {s['install_mean_skip']:.1%})")
+    if s.get("install_work_bytes", 0) or s.get("install_stall_steps", 0):
+        hidden = s["overlap_hidden_bytes"]
+        work = max(s["install_work_bytes"], 1.0)
+        lines.append(
+            f"install pipeline: {int(s['install_stall_steps'])} stall steps, "
+            f"{hidden/1e6:.2f} MB of {s['install_work_bytes']/1e6:.2f} MB "
+            f"hidden under decode ({hidden/work:.0%}); "
+            f"worst inter-token gap p50/p95 "
+            f"{s['itl_max_p50_s']*1e3:.1f}/{s['itl_max_p95_s']*1e3:.1f} ms")
     return "\n".join(lines)

@@ -38,6 +38,8 @@ class Request:
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     preemptions: int = 0
+    last_token_t: Optional[float] = None
+    max_itl: Optional[float] = None   # worst inter-token gap seen
 
     @property
     def prompt_len(self) -> int:
@@ -53,6 +55,15 @@ class Request:
         prefill's last-position logits produce exactly the token the evicted
         decode would have produced."""
         return self.prompt + tuple(self.generated)
+
+    def note_token(self, t: float) -> None:
+        """Record a token emission time; tracks the worst inter-token gap,
+        which is where install stalls at tenant-turn boundaries surface."""
+        if self.last_token_t is not None:
+            gap = t - self.last_token_t
+            self.max_itl = gap if self.max_itl is None else max(self.max_itl,
+                                                                gap)
+        self.last_token_t = t
 
     @property
     def latency(self) -> Optional[float]:

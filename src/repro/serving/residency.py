@@ -23,6 +23,7 @@ from repro.nn.config import ModelConfig
 from repro.nn.transformer import stack_plan
 from repro.streaming.delta import QuantizedStore
 from repro.streaming.executor import _split_block_params
+from repro.streaming.plan import InstallCostModel
 
 
 def model_layer_tensors(params: Any, cfg: ModelConfig) -> List[List[np.ndarray]]:
@@ -123,6 +124,18 @@ class WeightResidencyManager:
         ids = self.layer_ids[model]
         return sum(1 for l in ids if l in self.resident) / max(len(ids), 1)
 
+    def is_resident(self, model: str) -> bool:
+        """Every layer of `model` currently occupies an arena slot."""
+        return all(l in self.resident for l in self.layer_ids[model])
+
+    def touch(self, model: str, step: int) -> None:
+        """Refresh the LRU stamp of `model`'s resident layers (a tenant that
+        decoded this step must not look like an eviction candidate)."""
+        for l in self.layer_ids[model]:
+            slot = self.resident.get(l)
+            if slot is not None:
+                self._stamp[slot] = step
+
     # ----------------------------------------------------------- install
     def _cost(self, occupant: Optional[int], layer: int) -> Tuple[int, float]:
         """Wire bytes to install `layer` over `occupant`.  The installer
@@ -171,8 +184,7 @@ class WeightResidencyManager:
         pinned = set(pinned) | {model}
         missing = [l for l in self.layer_ids[model] if l not in self.resident]
         if not missing:
-            for l in self.layer_ids[model]:
-                self._stamp[self.resident[l]] = step
+            self.touch(model, step)
             return 0
 
         def evictable(slot: int) -> bool:
@@ -199,6 +211,121 @@ class WeightResidencyManager:
             wire_total += self._install(layer, slot, step)
             missing.remove(layer)
             candidates.remove(slot)
-        for l in self.layer_ids[model]:
-            self._stamp[self.resident[l]] = step
+        self.touch(model, step)
         return wire_total
+
+
+class InstallPipeline:
+    """Budgeted, overlappable layer installs — ARAS §IV applied to tenant
+    switches.
+
+    Where `ensure()` installs a whole tenant synchronously at the turn
+    boundary, the pipeline spreads the same greedy min-delta installs over
+    per-step tick budgets so they run *while* the outgoing tenant's final
+    decode steps still compute.  One tick is the DMA work one decode step
+    hides (`InstallCostModel.bytes_per_tick` wire bytes); an install commits
+    — and its stats land in `ResidencyStats` — only when its whole tick cost
+    has been pumped, mirroring a transfer that completes mid-turn.
+
+    Victim choice is `ensure()`'s rule evaluated incrementally: each unit
+    picks the (incoming layer, evictable slot) pair with the cheapest delta
+    stream, tie-broken toward the incoming tenant's earliest layers, so the
+    target's first-executed layers become resident first (the order its
+    first post-switch decode step needs them — the serving analogue of
+    `streaming/executor.py` installing layer i+1 behind layer i's compute).
+    """
+
+    def __init__(self, residency: WeightResidencyManager,
+                 cost: InstallCostModel):
+        self.res = residency
+        self.cost = cost
+        self.target: Optional[str] = None
+        self._missing: List[int] = []
+        # in-flight install: [layer, slot, ticks_left, ticks_total, wire]
+        self._cur: Optional[List[int]] = None
+        self.pumped_ticks = 0
+        self.aborts = 0
+
+    @property
+    def idle(self) -> bool:
+        return self.target is None
+
+    def begin(self, model: str, step: int) -> None:
+        """(Re)target the pipeline.  Retargeting drops any in-flight
+        partial install — its ticks are sunk cost, counted in `aborts`."""
+        missing = [l for l in self.res.layer_ids[model]
+                   if l not in self.res.resident]
+        if self.target == model:
+            if self._cur is not None:
+                missing = [l for l in missing if l != self._cur[0]]
+            self._missing = missing
+            return
+        if self._cur is not None:
+            self.aborts += 1
+            self._cur = None
+        self.target = model
+        self._missing = missing
+
+    def _evictable(self, slot: int, pinned: Set[str]) -> bool:
+        occ = self.res.slots[slot]
+        return occ is None or self.res.model_of[occ] not in pinned
+
+    def _pick(self, pinned: Set[str]) -> Optional[Tuple[int, int, int]]:
+        best = None
+        for slot in range(self.res.arena_slots):
+            if not self._evictable(slot, pinned):
+                continue
+            for layer in self._missing:
+                wire, _ = self.res._cost(self.res.slots[slot], layer)
+                key = (wire, layer, self.res._stamp[slot])
+                if best is None or key < best[0]:
+                    best = (key, layer, slot)
+        if best is None:
+            return None
+        (wire, _, _), layer, slot = best
+        return layer, slot, wire
+
+    def pump(self, ticks: int, pinned: Set[str], step: int
+             ) -> Tuple[int, int]:
+        """Spend up to `ticks` install ticks toward the target's missing
+        layers.  Returns (wire bytes committed, wire bytes processed) — the
+        latter includes the pro-rata share of partially pumped installs, so
+        the engine can attribute this step's DMA work to overlap-hidden vs
+        stalled time."""
+        if self.target is None:
+            return 0, 0
+        pinned = set(pinned) | {self.target}
+        committed = 0
+        processed = 0.0
+        while ticks > 0:
+            if self._cur is None:
+                if not self._missing:
+                    break
+                pick = self._pick(pinned)
+                if pick is None:
+                    break               # nothing evictable right now
+                layer, slot, wire = pick
+                self._missing.remove(layer)   # _missing never holds in-flight
+                t = self.cost.ticks_for(wire)
+                self._cur = [layer, slot, t, t, wire]
+            elif not self._evictable(self._cur[1], pinned):
+                # our victim got re-pinned (e.g. the outgoing tenant's turn
+                # did not actually end) — drop the partial transfer and put
+                # the layer back on the queue
+                self.aborts += 1
+                self._missing.append(self._cur[0])
+                self._cur = None
+                continue
+            layer, slot, left, total, wire = self._cur
+            spend = min(ticks, left)
+            ticks -= spend
+            left -= spend
+            self.pumped_ticks += spend
+            processed += wire * (spend / total)
+            self._cur[2] = left
+            if left == 0:
+                committed += self.res._install(layer, slot, step)
+                self._cur = None
+        if self._cur is None and not self._missing:
+            self.target = None          # fully resident: pipeline drains
+        return committed, int(round(processed))

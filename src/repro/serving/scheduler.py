@@ -92,6 +92,40 @@ class StepScheduler:
         return admits
 
     # ------------------------------------------------------ decode picks
+    @property
+    def current_turn_model(self) -> Optional[str]:
+        return self._turn_model
+
+    @property
+    def turn_steps_left(self) -> int:
+        return self._turn_left
+
+    @property
+    def turn_ending(self) -> bool:
+        """True right after a `pick_models` that handed the turn holder its
+        final time-slice step — the install pipeline's cue that the holder's
+        slots can be overwritten behind this step's execution front."""
+        return self._turn_model is not None and self._turn_left <= 0
+
+    def refund_turn_step(self) -> None:
+        """Give the turn holder back one slice step.  The engine calls this
+        when the holder spent the step stalled on weight installs instead of
+        decoding, so install latency never eats the decode slice (which
+        could otherwise rotate a never-resident tenant forever)."""
+        if self._turn_model is not None:
+            self._turn_left += 1
+
+    def peek_next_model(self, demand_models: Sequence[str]) -> Optional[str]:
+        """The tenant the rotation will hand the turn to next — what the
+        install pipeline should prefetch during the current holder's final
+        steps.  None when no turn is active (co-resident tenants switch
+        nothing)."""
+        demand = sorted(set(demand_models))
+        if not demand or self._turn_model is None:
+            return None
+        after = [m for m in demand if m > self._turn_model]
+        return after[0] if after else demand[0]
+
     def pick_models(self, demand_models: Sequence[str], residency
                     ) -> List[str]:
         """Which tenants run this step (decode AND admissions — prefill only

@@ -30,7 +30,8 @@ from repro.nn.config import ModelConfig
 from repro.nn.layers import rmsnorm, unembed
 from repro.nn.transformer import apply_block
 from repro.streaming.delta import QuantizedStore
-from repro.streaming.plan import StreamLayer, StreamPlan, TpuLinkModel, build_stream_plan
+from repro.streaming.plan import (InstallCostModel, StreamLayer, StreamPlan,
+                                  TpuLinkModel, build_stream_plan)
 
 QUANT_MIN_SIZE = 1024  # tensors smaller than this stay fp32-resident
 
@@ -50,6 +51,7 @@ class InstallStats:
     wire_bytes: int = 0
     installs: int = 0
     skips: float = 0.0
+    modeled_s: float = 0.0   # cost-model install time (the latency overlap hides)
 
     @property
     def mean_skip(self) -> float:
@@ -107,9 +109,11 @@ class StreamingExecutor:
             for i in range(self.n_layers)
         ]
         slot_bytes = max(l.bytes_int8 for l in stream_layers)
+        self.cost_model = InstallCostModel.from_link(link)
         self.plan: StreamPlan = build_stream_plan(
             stream_layers, hbm_weight_budget_bytes=arena_slots * slot_bytes,
-            link=link, slot_bytes=slot_bytes, replication=False)
+            link=link, slot_bytes=slot_bytes, replication=False,
+            cost_model=self.cost_model)
 
         self._compute_fns: Dict[int, Any] = {}
 
@@ -133,6 +137,7 @@ class StreamingExecutor:
         self.stats.wire_bytes += wire
         self.stats.installs += 1
         self.stats.skips += skip
+        self.stats.modeled_s += self.cost_model.install_s(wire)
         if occ is None or codes_dev is None or codes_dev.size != new_codes.size:
             codes_dev = jax.device_put(new_codes)  # cold install: full stream
         else:
@@ -207,6 +212,7 @@ class StreamingExecutor:
             "raw_bytes": float(self.stats.raw_bytes),
             "wire_bytes": float(self.stats.wire_bytes),
             "mean_skip": self.stats.mean_skip,
+            "install_s_model": self.stats.modeled_s,
             "plan_makespan_s": self.plan.makespan_s,
             "plan_serial_s": self.plan.serial_makespan_s,
             "plan_overlap_speedup": self.plan.overlap_speedup,

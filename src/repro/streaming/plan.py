@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 from repro.core.replication import LayerCost, plan_writes
 
@@ -29,6 +29,37 @@ class TpuLinkModel:
     hbm_bw: float = 819e9
     dma_bw: float = 100e9               # host→device per chip (PCIe/offload)
     dma_latency_s: float = 50e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class InstallCostModel:
+    """Wire bytes → install latency, shared between the static StreamPlan
+    (continuous seconds) and the serving engine's InstallPipeline (integer
+    ticks — one tick is the DMA work a single decode step can hide).
+
+    The two views model the same link: `install_s` is the StreamPlan's
+    bandwidth + fixed-launch-latency cost, `ticks_for` quantizes the same
+    stream into per-step budget units so a simulated-time engine can account
+    overlap without a device clock."""
+
+    bytes_per_s: float = 100e9
+    latency_s: float = 50e-6
+    bytes_per_tick: int = 1 << 16
+
+    def install_s(self, wire_bytes: float, replication: int = 1) -> float:
+        return wire_bytes * replication / self.bytes_per_s + self.latency_s
+
+    def ticks_for(self, wire_bytes: int) -> int:
+        """Whole install ticks for a wire stream (min 1: even a fully
+        skipped delta pays the launch latency)."""
+        per = max(int(self.bytes_per_tick), 1)
+        return max(1, -(-int(wire_bytes) // per))
+
+    @classmethod
+    def from_link(cls, link: "TpuLinkModel",
+                  bytes_per_tick: int = 1 << 16) -> "InstallCostModel":
+        return cls(bytes_per_s=link.dma_bw, latency_s=link.dma_latency_s,
+                   bytes_per_tick=bytes_per_tick)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,7 +107,10 @@ def build_stream_plan(
     link: TpuLinkModel = TpuLinkModel(),
     slot_bytes: Optional[int] = None,
     replication: bool = True,
+    cost_model: Optional[InstallCostModel] = None,
 ) -> StreamPlan:
+    if cost_model is None:
+        cost_model = InstallCostModel.from_link(link)
     if slot_bytes is None:
         slot_bytes = max(l.bytes_int8 for l in layers)
         slot_bytes = max(slot_bytes // 4, 1)  # 4 sub-slots of the biggest layer
@@ -95,7 +129,7 @@ def build_stream_plan(
             base_rows=slots_of(l),
             compute_cycles=l.compute_s(link) * secs,
             max_replication=8 if replication else 1,
-            write_dma_cycles=(l.bytes_int8 / link.dma_bw + link.dma_latency_s) * secs,
+            write_dma_cycles=cost_model.install_s(l.bytes_int8) * secs,
         )
         for l in layers
     ]
@@ -126,8 +160,7 @@ def build_stream_plan(
                     return  # partial installs not supported: slot granularity
                 l = layers[it.layer_idx]
                 start = max(now, dma_free)
-                dur = (l.bytes_int8 * it.replication / link.dma_bw
-                       + link.dma_latency_s)
+                dur = cost_model.install_s(l.bytes_int8, it.replication)
                 end = start + dur
                 dma_free = end
                 free -= it.rows
@@ -160,6 +193,6 @@ def build_stream_plan(
     # Naive (Fig 7) reference: strictly serial install → compute.
     serial = 0.0
     for l in layers:
-        serial += l.bytes_int8 / link.dma_bw + link.dma_latency_s
+        serial += cost_model.install_s(l.bytes_int8)
         serial += l.compute_s(link)
     return StreamPlan(layers, events, slot_bytes, n_slots, makespan, serial)

@@ -249,6 +249,149 @@ def test_sampling_is_seed_deterministic_and_top_k_bounded():
     assert len(set(draws)) > 1       # genuinely stochastic at T=1.5
 
 
+# ------------------------------------------------------ metrics math
+def _finished_request(rid, arrival, first, finish, max_itl=None):
+    r = Request(rid=rid, model="a", prompt=(1,), max_new_tokens=1,
+                arrival_t=arrival)
+    r.first_token_t = first
+    r.finish_t = finish
+    r.max_itl = max_itl
+    return r
+
+
+def test_metrics_quantiles_on_known_distribution():
+    """p50/p95 of latency/ttft/itl on a known uniform grid must match
+    numpy's linear-interpolation percentiles exactly."""
+    from repro.serving import EngineMetrics
+    m = EngineMetrics()
+    for i in range(1, 101):   # latencies 1..100s, ttft 0.1..10s, itl i/200
+        m.record_finish(_finished_request(i, 0.0, i / 10.0, float(i),
+                                          max_itl=i / 200.0))
+    s = m.summary(wall_s=10.0)
+    assert s["latency_p50_s"] == pytest.approx(50.5)
+    assert s["latency_p95_s"] == pytest.approx(95.05)
+    assert s["ttft_p50_s"] == pytest.approx(5.05)
+    assert s["ttft_p95_s"] == pytest.approx(9.505)
+    assert s["itl_max_p50_s"] == pytest.approx(50.5 / 200.0)
+    assert s["itl_max_p95_s"] == pytest.approx(95.05 / 200.0)
+    assert s["requests_finished"] == 100
+
+
+def test_metrics_empty_window_edge_cases():
+    """No finished requests / no steps: percentiles are NaN (not a crash,
+    not a misleading zero), counters and rates are zero."""
+    import math
+
+    from repro.serving import EngineMetrics
+    s = EngineMetrics().summary(wall_s=0.0)
+    for k in ("latency_p50_s", "latency_p95_s", "ttft_p50_s", "ttft_p95_s",
+              "itl_max_p50_s", "itl_max_p95_s"):
+        assert math.isnan(s[k]), k
+    assert s["tokens_generated"] == 0
+    assert s["tokens_per_s"] == 0
+    assert s["queue_depth_mean"] == 0.0
+    assert s["queue_depth_max"] == 0.0
+    assert s["install_stall_steps"] == 0.0
+    assert s["overlap_hidden_bytes"] == 0.0
+
+    # a request that never got a first token contributes latency but no ttft
+    m = EngineMetrics()
+    m.record_finish(_finished_request(0, 0.0, None, 2.0))
+    s = m.summary(wall_s=1.0)
+    assert s["latency_p50_s"] == 2.0
+    assert math.isnan(s["ttft_p50_s"])
+    assert math.isnan(s["itl_max_p95_s"])   # single token: no gap
+
+
+def test_metrics_single_sample_percentiles_degenerate():
+    from repro.serving import EngineMetrics
+    m = EngineMetrics()
+    m.record_finish(_finished_request(0, 1.0, 2.5, 4.0, max_itl=0.25))
+    s = m.summary(wall_s=1.0)
+    assert s["latency_p50_s"] == s["latency_p95_s"] == 3.0
+    assert s["ttft_p50_s"] == s["ttft_p95_s"] == 1.5
+    assert s["itl_max_p50_s"] == s["itl_max_p95_s"] == 0.25
+
+
+def test_request_max_itl_tracks_worst_gap():
+    r = Request(rid=0, model="a", prompt=(1,), max_new_tokens=4,
+                arrival_t=0.0)
+    for t in (1.0, 2.0, 5.5, 6.0):
+        r.note_token(t)
+    assert r.max_itl == pytest.approx(3.5)
+    assert r.last_token_t == 6.0
+
+
+# -------------------------------------- residency property tests (hypothesis)
+def test_residency_victim_selection_invariants():
+    """Any ensure() sequence preserves the §V-C arena invariants: a pinned
+    (still-decoding) tenant never loses a resident layer, wire bytes never
+    exceed raw bytes, and the slot<->layer maps stay mutually consistent."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops_st = st.lists(st.tuples(st.sampled_from(["a", "b"]), st.booleans()),
+                      min_size=1, max_size=10)
+
+    @settings(max_examples=15, deadline=None)
+    @given(ops=ops_st, spare=st.integers(min_value=0, max_value=2))
+    def prop(ops, spare):
+        res = WeightResidencyManager(
+            {"a": (PARAMS_A, CFG), "b": (PARAMS_B, CFG)},
+            CFG.n_layers + spare, reuse=True)
+        for step, (model, pin_other) in enumerate(ops):
+            other = "b" if model == "a" else "a"
+            pinned = {model, other} if pin_other else {model}
+            other_was_resident = res.is_resident(other)
+            try:
+                res.ensure(model, step, pinned=pinned)
+            except RuntimeError:
+                # infeasible only when the pinned pair exceeds the arena —
+                # and the failed call must not have touched residency
+                assert pin_other and not res.fits({"a", "b"})
+                assert res.is_resident(other) == other_was_resident
+                continue
+            assert res.is_resident(model)
+            # never evicts a layer still needed by the pinned decode tenant
+            if pin_other and other_was_resident:
+                assert res.is_resident(other)
+            # slot <-> layer maps agree, one slot per layer
+            for layer, slot in res.resident.items():
+                assert res.slots[slot] == layer
+            occupants = [l for l in res.slots if l is not None]
+            assert len(occupants) == len(set(occupants))
+            assert len(occupants) == len(res.resident)
+            # stats invariants: the delta stream never ships more than raw,
+            # skip fractions stay within [0, 1] per install
+            assert 0 <= res.stats.wire_bytes <= res.stats.raw_bytes
+            assert 0.0 <= res.stats.skips <= res.stats.installs
+            assert res.stats.cold_installs <= res.stats.installs
+            assert 0.0 <= res.stats.savings <= 1.0
+
+    prop()
+
+
+def test_residency_reuse_off_ships_raw():
+    """With reuse disabled every install ships the full code stream: wire
+    bytes == raw bytes and no cell is ever skipped."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(ops=st.lists(st.sampled_from(["a", "b"]), min_size=1,
+                        max_size=10))
+    def prop(ops):
+        res = WeightResidencyManager(
+            {"a": (PARAMS_A, CFG), "b": (PARAMS_B, CFG)},
+            CFG.n_layers + 1, reuse=False)
+        for step, model in enumerate(ops):
+            res.ensure(model, step)
+        assert res.stats.wire_bytes == res.stats.raw_bytes
+        assert res.stats.skips == 0.0
+
+    prop()
+
+
 def test_engine_sampled_requests_are_reproducible():
     """Same seed → same continuation, across engine instances; greedy
     requests in the same batch stay oracle-exact."""

@@ -49,11 +49,15 @@ def _run_engine(args) -> None:
         tenants, weight_arena_slots=weight_slots,
         sched=SchedulerConfig(max_prefill_per_step=4,
                               model_turn_steps=args.turn_steps,
-                              policy=args.queue_policy),
+                              policy=args.queue_policy,
+                              prefill_token_budget=(
+                                  args.prefill_token_budget or None)),
         install_ticks_per_step=args.install_ticks_per_step,
         overlap_installs=args.overlap_installs,
         install_cost=InstallCostModel(
-            bytes_per_tick=args.install_bytes_per_tick))
+            bytes_per_tick=args.install_bytes_per_tick),
+        prefill_chunk=args.prefill_chunk,
+        bucket_growth=args.bucket_growth)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -104,6 +108,19 @@ def main() -> None:
                    help="engine: pipeline the next tenant's weight installs "
                         "under the current tenant's final decode steps "
                         "(needs --install-ticks-per-step > 0)")
+    p.add_argument("--prefill-chunk", type=int, default=0,
+                   help="engine: split prompt prefills into chunks of this "
+                        "many tokens, spread across steps (0 = monolithic "
+                        "per-prompt-length prefill)")
+    p.add_argument("--prefill-token-budget", type=int, default=0,
+                   help="engine: cap on prompt tokens one step may spend on "
+                        "chunked prefill (0 = unbudgeted; needs "
+                        "--prefill-chunk > 0 to matter)")
+    p.add_argument("--bucket-growth", type=float, default=2.0,
+                   help="engine: geometric growth of the prompt-length "
+                        "bucket ladder tail chunks are padded to; bounds "
+                        "distinct prefill jit traces at the ladder size "
+                        "(<= 1 disables bucketing)")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

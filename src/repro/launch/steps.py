@@ -6,7 +6,7 @@ serve.py) and the dry-run exercise the *same* code.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +14,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.data.pipeline import DataConfig, make_batch_specs
 from repro.nn.config import ModelConfig
-from repro.nn.model import decode_step, init_cache, init_params, lm_loss, prefill, param_specs
+from repro.nn.model import chunk_prefill, decode_step, init_cache, init_params, lm_loss, prefill, param_specs
 from repro.nn.transformer import layer_kind
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.schedules import cosine, wsd
@@ -70,6 +70,116 @@ def cached_serve_step(cfg: ModelConfig):
     """Batched decode step; `pos` may be a scalar or a per-row (B,) vector —
     the vector form is what slot-based continuous batching decodes with."""
     return jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+
+
+def make_chunk_prefill_step(cfg: ModelConfig, chunk_len: int, cache_len: int):
+    def chunk_prefill_step(params, tokens, caches, start, n_valid):
+        return chunk_prefill(params, tokens, caches, start, n_valid, cfg)
+    return chunk_prefill_step
+
+
+@functools.lru_cache(maxsize=None)
+def cached_chunk_prefill_step(cfg: ModelConfig, chunk_len: int,
+                              cache_len: int):
+    """One chunked-prefill step: `tokens` (1, chunk_len) land at absolute
+    positions [start, start+chunk_len) of a `cache_len` staging cache, with
+    only the first `n_valid` real (the engine pads the tail chunk up to a
+    bucket-ladder rung).  Keyed on the padded chunk length, so the number of
+    LRU misses IS the number of distinct jit traces — with bucketing on it
+    is bounded by the ladder size instead of growing with every new prompt
+    length (see prefill_cache_info)."""
+    return jax.jit(make_chunk_prefill_step(cfg, chunk_len, cache_len),
+                   donate_argnums=(2,))
+
+
+def prefill_cache_info() -> Dict[str, int]:
+    """Hit/miss/trace counters over the prefill step caches (process-wide,
+    shared by every engine instance of the same config — the compile-count
+    tests and the bucketing benchmark read deltas of these)."""
+    mono = cached_prefill_step.cache_info()
+    chunk = cached_chunk_prefill_step.cache_info()
+    return {
+        "prefill_hits": mono.hits, "prefill_misses": mono.misses,
+        "prefill_traces": mono.currsize,
+        "chunk_hits": chunk.hits, "chunk_misses": chunk.misses,
+        "chunk_traces": chunk.currsize,
+        "hits": mono.hits + chunk.hits,
+        "misses": mono.misses + chunk.misses,
+        "traces": mono.currsize + chunk.currsize,
+    }
+
+
+# ----------------------------------------- chunked-prefill staging install
+def _finalize_attn_entry(cfg: ModelConfig, entry, *, axis: int, window: int,
+                         target_len: int, true_len, ring_windows: bool):
+    """Convert one attention cache entry from the raw full-length staging
+    layout to the serving-arena layout: quantize int8 tenants (staging
+    attends in bf16, exactly like monolithic prefill, and quantizes once
+    here), ring-gather sliding-window layers down to their window-sized
+    ring (slot arenas only — page pools store full positions), and slice
+    everything else to the arena length."""
+    def shape_to(leaf):
+        if ring_windows and 0 < window < target_len:
+            # ring slot i holds the largest valid position ≡ i (mod window);
+            # slots with no valid position yet gather clipped garbage that
+            # the decode mask (abs_pos >= 0) never admits
+            last = true_len - 1
+            idx = last - ((last - jnp.arange(window)) % window)
+            return jnp.take(leaf, idx, axis=axis, mode="clip")
+        if leaf.shape[axis] > target_len:
+            return jax.lax.slice_in_dim(leaf, 0, target_len, axis=axis)
+        return leaf
+
+    if cfg.attn_type == "mla":
+        return {k: shape_to(v) for k, v in entry.items()}
+    if cfg.kv_cache_dtype == "int8":
+        from repro.nn.attention import _kv_quant
+        kq, ks = _kv_quant(entry["k"])
+        vq, vs = _kv_quant(entry["v"])
+        return {"k": shape_to(kq), "v": shape_to(vq),
+                "k_scale": shape_to(ks), "v_scale": shape_to(vs)}
+    return {"k": shape_to(entry["k"]), "v": shape_to(entry["v"])}
+
+
+def _make_stage_finalize(cfg: ModelConfig, target_len: int,
+                         ring_windows: bool):
+    from repro.nn.transformer import stack_plan
+    plan = stack_plan(cfg)
+
+    def finalize(staging, true_len):
+        out = []
+        for seg, (start, _, scanned) in zip(staging, plan):
+            if isinstance(seg, dict) and "attn" in seg:
+                fixed = dict(seg)
+                fixed["attn"] = _finalize_attn_entry(
+                    cfg, seg["attn"], axis=2 if scanned else 1,
+                    window=cfg.window_for_layer(start),
+                    target_len=target_len, true_len=true_len,
+                    ring_windows=ring_windows)
+                out.append(fixed)
+            else:
+                out.append(seg)    # pure recurrent state: length-free
+        return out
+
+    return finalize
+
+
+@functools.lru_cache(maxsize=None)
+def cached_stage_install(cfg: ModelConfig, staging_len: int, arena_len: int):
+    """Staging → slot-arena row: ring windowed layers, slice the rest to
+    `arena_len`, quantize int8 tenants.  Not donated: ring/slice outputs
+    change leaf shapes, so donated staging buffers would never be reused
+    (XLA warns instead)."""
+    return jax.jit(_make_stage_finalize(cfg, arena_len, ring_windows=True))
+
+
+@functools.lru_cache(maxsize=None)
+def cached_stage_quantize(cfg: ModelConfig, staging_len: int):
+    """Staging → paged-pool install source: page pools keep full positions
+    (no ring), so this only quantizes int8 tenants.  NOT donated — the page
+    writer slices several blocks out of the same finalized cache."""
+    return jax.jit(_make_stage_finalize(cfg, staging_len,
+                                        ring_windows=False))
 
 
 def make_paged_serve_step(cfg: ModelConfig):

@@ -289,6 +289,10 @@ def attention(
     * train:   cache=None, make_cache=False
     * prefill: cache=None, make_cache=True (cache_len ≥ S)
     * decode:  cache given, S == 1, cache_pos = current position
+    * chunked prefill: cache given, S > 1, cache_pos = scalar chunk start —
+      this chunk's K/V land at absolute positions [cache_pos, cache_pos+S)
+      of a full-length staging cache (windowed layers store every position
+      and mask the window; no ring until arena install)
     * paged decode: cache leaves are page pools (P, page, ...) and
       page_table (B, T) maps each row's logical blocks to physical pages
       (cache_pos must be a per-row (B,) vector)
@@ -326,13 +330,27 @@ def attention(
             valid = kpos <= cp
             if layer_window > 0:
                 valid = valid & (kpos > cp - layer_window)
+            valid = valid[:, None, :]                     # (B, 1, Sc)
         else:
             # Decode: append to the ring/full cache then attend over it.
             # SWA layers keep a ring buffer of `window` slots
-            # (slot = pos % window).
-            ring = layer_window if 0 < layer_window < cache["k"].shape[1] else 0
+            # (slot = pos % window); make_cache emits an exactly-window-sized
+            # ring once the cache budget reaches the window, so the boundary
+            # must accept `==` — a strictly-smaller cache is a full cache the
+            # window never binds on.  Chunked prefill (S > 1) instead appends
+            # at absolute positions into a full-length staging cache:
+            # windowed layers store every position and mask the window in
+            # the scores; the ring conversion happens when the staging cache
+            # is installed into the serving arena (launch.steps).
+            chunked = S > 1
+            ring = (layer_window
+                    if not chunked and 0 < layer_window <= cache["k"].shape[1]
+                    else 0)
             slot = cache_pos % ring if ring else cache_pos
-            if cfg.kv_cache_dtype == "int8":
+            # int8 tenants chunk-prefill into a *raw* bf16 staging cache
+            # (quantization happens once at arena install, matching the
+            # monolithic prefill's attend-raw-then-quantize order)
+            if cfg.kv_cache_dtype == "int8" and not chunked:
                 kq, ks = _kv_quant(k)
                 vq, vs = _kv_quant(v)
                 kc8 = _dus_batch(cache["k"], kq, slot)
@@ -353,23 +371,33 @@ def attention(
                 new_cache = {"k": kc, "v": vc}
             Sc = kc.shape[1]
             kpos = jnp.arange(Sc)[None, :]
-            # cp: (1, 1) scalar broadcast or (B, 1) per-sequence positions —
-            # the continuous-batching engine decodes a slot batch where
-            # every row sits at a different position.
-            cp = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
-            if ring:
-                # Absolute position held by slot i: the largest p ≤
-                # cache_pos with p ≡ i (mod ring).
-                abs_pos = cp - ((cp - kpos) % ring)
-                valid = (abs_pos >= 0) & (abs_pos > cp - ring)
+            if chunked:
+                # Per-query causal (+window) mask over the staging cache:
+                # query i sits at absolute position cache_pos + i.
+                qpos = (cache_pos + jnp.arange(S))[:, None]
+                valid = kpos <= qpos
+                if layer_window > 0:
+                    valid = valid & (qpos - kpos < layer_window)
+                valid = valid[None]                       # (1, S, Sc)
             else:
-                valid = kpos <= cp
+                # cp: (1, 1) scalar broadcast or (B, 1) per-sequence
+                # positions — the continuous-batching engine decodes a slot
+                # batch where every row sits at a different position.
+                cp = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
+                if ring:
+                    # Absolute position held by slot i: the largest p ≤
+                    # cache_pos with p ≡ i (mod ring).
+                    abs_pos = cp - ((cp - kpos) % ring)
+                    valid = (abs_pos >= 0) & (abs_pos > cp - ring)
+                else:
+                    valid = kpos <= cp
+                valid = valid[:, None, :]                 # (B|1, 1, Sc)
         scale = 1.0 / math.sqrt(cfg.head_dim)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
                        kc.astype(jnp.float32)) * scale
         if cfg.logit_softcap > 0:
             s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
-        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vc.astype(jnp.float32))
     else:
@@ -387,7 +415,7 @@ def attention(
                                   unroll=cfg.unroll_chunks)
         if make_cache:
             L = cache_len or S
-            ring = layer_window if 0 < layer_window < L else 0
+            ring = layer_window if 0 < layer_window <= L else 0
             Lc = ring if ring else L
             int8 = cfg.kv_cache_dtype == "int8"
             if int8:
@@ -513,7 +541,8 @@ def _mla_attention(params, x, cfg: ModelConfig, *, positions, prefix_len,
     k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
 
     new_cache = None
-    if cache is not None:
+    chunked = cache is not None and S > 1
+    if cache is not None and not chunked:
         # ---- absorbed-matmul decode (DeepSeek-V2 §Low-Rank KV) ----
         # Never materialize per-head K/V from the latent cache: fold W_uk
         # into the query and W_uv into the output —
@@ -539,7 +568,7 @@ def _mla_attention(params, x, cfg: ModelConfig, *, positions, prefix_len,
             new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
         Sc = ckv_c.shape[1]
         cp = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
-        valid = (jnp.arange(Sc)[None, :] <= cp)
+        valid = (jnp.arange(Sc)[None, :] <= cp)[:, None, :]
         w_uk = params["w_uk"].astype(jnp.float32).reshape(
             cfg.kv_lora_rank, H, nope)
         w_uv = params["w_uv"].astype(jnp.float32).reshape(
@@ -550,7 +579,7 @@ def _mla_attention(params, x, cfg: ModelConfig, *, positions, prefix_len,
         s = s + jnp.einsum("bshd,bkd->bhsk", q_rope.astype(jnp.float32),
                            kr_c.astype(jnp.float32))
         s = s * scale
-        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        s = jnp.where(valid[:, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         ctx = jnp.einsum("bhsk,bkr->bshr", p, ckv_c.astype(jnp.float32))
         o = jnp.einsum("bshr,rhv->bshv", ctx, w_uv)
@@ -558,8 +587,23 @@ def _mla_attention(params, x, cfg: ModelConfig, *, positions, prefix_len,
         y = jnp.einsum("btq,qd->btd", o, params["w_o"].astype(x.dtype))
         return y, new_cache
 
-    c_all, kr_all = c_kv, k_rope
-    Sc = S
+    if chunked:
+        # Chunked prefill: append this chunk's latents into the staging
+        # buffer, then materialize per-head K/V from the whole buffer the
+        # way the monolithic prefill does — identical numerics per position,
+        # so chunked and monolithic prefills agree bitwise.  The
+        # absorbed-matmul trick stays decode-only (one token amortizes the
+        # re-expansion; a prefill recomputes it anyway).
+        ckv_c = _dus_batch(cache["c_kv"], c_kv, cache_pos)
+        kr_c = _dus_batch(cache["k_rope"], k_rope, cache_pos)
+        ckv_c = shard(ckv_c, "batch", "sp", None)
+        kr_c = shard(kr_c, "batch", "sp", None)
+        new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
+        c_all, kr_all = ckv_c, kr_c
+        Sc = c_all.shape[1]
+    else:
+        c_all, kr_all = c_kv, k_rope
+        Sc = S
 
     k_nope = jnp.einsum("btr,rq->btq", c_all, params["w_uk"].astype(x.dtype))
     k_nope = k_nope.reshape(B, Sc, H, nope)
@@ -572,7 +616,12 @@ def _mla_attention(params, x, cfg: ModelConfig, *, positions, prefix_len,
     qq = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
     qq = qq.reshape(B, S, H, 1, nope + rope_d)
 
-    if S <= 1024:
+    if chunked:
+        # queries sit at `positions`; keys cover the whole staging buffer
+        mask = _mask(positions, jnp.arange(Sc)[None, :], causal=cfg.causal,
+                     window=0, prefix_len=prefix_len)
+        o = _softmax_attend(qq, k, vv, mask, 0.0)
+    elif S <= 1024:
         mask = _mask(positions, positions, causal=cfg.causal, window=0,
                      prefix_len=prefix_len)
         o = _softmax_attend(qq, k, vv, mask, 0.0)

@@ -10,7 +10,6 @@ Input contract (`batch` dict):
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -156,9 +155,15 @@ def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig
 
 # ------------------------------------------------------------------ cache
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, staging: bool = False):
     """Allocate decode caches, mirroring the stack's segment plan:
-    scanned segments get stacked (length, ...) caches, singles get dicts."""
+    scanned segments get stacked (length, ...) caches, singles get dicts.
+    ``staging=True`` gives the chunked-prefill staging layout instead:
+    sliding-window layers keep full ``cache_len`` buffers (every position
+    stored, the window applied in the score mask, the ring produced only at
+    arena-install time) and int8 tenants keep raw bf16 K/V (quantization is
+    deferred to the install, exactly like the monolithic prefill quantizes
+    once after attending in full precision)."""
     from repro.nn.transformer import stack_plan
 
     def attn_cache(window: int):
@@ -167,15 +172,16 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
                 "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
                 "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
             }
-        L = min(window, cache_len) if window else cache_len
-        kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+        L = min(window, cache_len) if window and not staging else cache_len
+        int8 = cfg.kv_cache_dtype == "int8" and not staging
+        kv_dt = jnp.int8 if int8 else dtype
         out = {
             "k": shard(jnp.zeros((batch, L, cfg.n_kv_heads, cfg.head_dim), kv_dt),
                        "batch", "sp", None, None),
             "v": shard(jnp.zeros((batch, L, cfg.n_kv_heads, cfg.head_dim), kv_dt),
                        "batch", "sp", None, None),
         }
-        if cfg.kv_cache_dtype == "int8":
+        if int8:
             out["k_scale"] = shard(
                 jnp.zeros((batch, L, cfg.n_kv_heads), jnp.float32),
                 "batch", "sp", None)
@@ -211,6 +217,28 @@ def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
     logits, caches, _ = forward(params, batch, cfg, make_cache=True,
                                 cache_len=cache_len, last_only=True)
     return logits[:, 0], caches
+
+
+def chunk_prefill(params: Params, tokens: jax.Array, caches, start, n_valid,
+                  cfg: ModelConfig):
+    """One chunked-prefill step: run ``tokens`` (B, C) at absolute positions
+    [start, start+C) against the staging ``caches`` built by earlier chunks
+    (``init_cache(..., staging=True)`` zeros for the first chunk).
+    Only the first ``n_valid`` tokens are real; the padded tail writes K/V
+    the position masks never admit and leaves recurrent state frozen.
+    Returns (logits at position start + n_valid - 1, updated caches) — the
+    last chunk's logits are the prompt's next-token distribution, exactly
+    as ``prefill`` returns it."""
+    B, C = tokens.shape
+    positions = (start + jnp.arange(C))[None, :]
+    x = embed(params["embedding"], tokens, cfg)
+    x, new_caches, _ = apply_stack(
+        params["stack"], x, cfg, positions=positions, caches=caches,
+        cache_pos=start, valid_len=n_valid)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = unembed(params["embedding"], x, cfg)
+    return logits[:, 0], new_caches
 
 
 def decode_step(params: Params, token: jax.Array, caches, pos,

@@ -100,8 +100,11 @@ def mamba_specs(cfg: ModelConfig) -> Params:
 
 
 def _mamba_conv(x: jax.Array, conv_w: jax.Array,
-                conv_state: Optional[jax.Array] = None):
-    """Causal depthwise conv over seq.  x: (B, S, di), conv_w: (W, di)."""
+                conv_state: Optional[jax.Array] = None,
+                valid_len: Optional[jax.Array] = None):
+    """Causal depthwise conv over seq.  x: (B, S, di), conv_w: (W, di).
+    With ``valid_len`` (chunked prefill) the carried conv window ends at the
+    last *valid* token instead of the padded chunk tail."""
     W = conv_w.shape[0]
     if conv_state is None:
         pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
@@ -110,24 +113,34 @@ def _mamba_conv(x: jax.Array, conv_w: jax.Array,
     xp = jnp.concatenate([pad, x], axis=1)
     out = sum(xp[:, i:i + x.shape[1]] * conv_w[i].astype(x.dtype)
               for i in range(W))
-    new_state = xp[:, -(W - 1):] if W > 1 else None
+    if W <= 1:
+        new_state = None
+    elif valid_len is None:
+        new_state = xp[:, -(W - 1):]
+    else:
+        new_state = jax.lax.dynamic_slice_in_dim(xp, valid_len, W - 1, axis=1)
     return out, new_state
 
 
 def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
           cache: Optional[Params] = None, chunk: int = 256,
-          make_cache: bool = False
+          make_cache: bool = False, valid_len: Optional[jax.Array] = None
           ) -> Tuple[jax.Array, Optional[Params]]:
-    """x: (B, S, d).  cache = {conv, h} for decode (S == 1)."""
+    """x: (B, S, d).  cache = {conv, h} for decode (S == 1).  cache with
+    S > 1 is a chunked-prefill continuation: the recurrence resumes from the
+    carried state, and only the first ``valid_len`` tokens of the chunk
+    advance it (the padded tail is a frozen no-op)."""
     B, S, d = x.shape
     di = cfg.ssm_expand * d
     N = cfg.ssm_state
     dt_rank = params["w_dt"].shape[0]
+    chunk_mode = cache is not None and S > 1
 
     u = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
     x_in, z = jnp.split(u, 2, axis=-1)
     conv_state = cache["conv"] if cache is not None else None
-    x_c, new_conv = _mamba_conv(x_in, params["conv"], conv_state)
+    x_c, new_conv = _mamba_conv(x_in, params["conv"], conv_state,
+                                valid_len=valid_len if chunk_mode else None)
     x_c = jax.nn.silu(x_c)
 
     xdbc = jnp.einsum("bse,ef->bsf", x_c, params["w_xproj"].astype(x.dtype))
@@ -145,7 +158,7 @@ def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
         y = jnp.einsum("ben,bn->be", h, c_t)
         return h, y
 
-    if cache is not None:
+    if cache is not None and not chunk_mode:
         h0 = cache["h"]
         xs = (x_c[:, 0].astype(jnp.float32), dt[:, 0],
               Bc[:, 0].astype(jnp.float32), Cc[:, 0].astype(jnp.float32))
@@ -153,7 +166,12 @@ def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
         y = y[:, None]
         new_cache = {"conv": new_conv, "h": h1}
     else:
-        h0 = jnp.zeros((B, di, N), jnp.float32)
+        h0 = cache["h"] if chunk_mode else jnp.zeros((B, di, N), jnp.float32)
+        if chunk_mode and valid_len is not None:
+            # Freeze the recurrence past the chunk's valid tokens: dt = 0
+            # makes the state update the identity (dA = 1, dBx = 0), exactly
+            # like the zero-padded tail of the monolithic scan below.
+            dt = dt * (jnp.arange(S) < valid_len)[None, :, None]
         xs = (x_c.swapaxes(0, 1).astype(jnp.float32), dt.swapaxes(0, 1),
               Bc.swapaxes(0, 1).astype(jnp.float32),
               Cc.swapaxes(0, 1).astype(jnp.float32))
@@ -165,7 +183,7 @@ def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
                               unroll_outer=cfg.unroll_chunks)
         y = ys[:S].swapaxes(0, 1)
         new_cache = None
-        if make_cache:
+        if make_cache or chunk_mode:
             # prefill: hand the final recurrent + conv state to decode
             new_cache = {"conv": new_conv, "h": hT}
 
@@ -242,7 +260,7 @@ def _mlstm_chunk(q, k, v, log_f, i_gate, S0, n0):
 
 def mlstm(params: Params, x: jax.Array, cfg: ModelConfig,
           cache: Optional[Params] = None, chunk: int = 256,
-          make_cache: bool = False
+          make_cache: bool = False, valid_len: Optional[jax.Array] = None
           ) -> Tuple[jax.Array, Optional[Params]]:
     B, S, d = x.shape
     di = cfg.ssm_expand * d
@@ -266,7 +284,7 @@ def mlstm(params: Params, x: jax.Array, cfg: ModelConfig,
     i_g = i_gate.transpose(0, 2, 1)
     lf = log_f.transpose(0, 2, 1)
 
-    if cache is not None:  # decode: single step, direct recurrence
+    if cache is not None and S == 1:  # decode: single step, direct recurrence
         S0, n0 = cache["S"], cache["n"]
         f1 = jnp.exp(lf[..., 0])                       # (B,H)
         i1 = i_g[..., 0]
@@ -279,6 +297,14 @@ def mlstm(params: Params, x: jax.Array, cfg: ModelConfig,
         y = y[:, :, None, :]                           # (B,H,1,D)
         new_cache = {"S": S1, "n": n1}
     else:
+        if cache is not None and valid_len is not None:
+            # chunked prefill: zeroed gates make a step the identity
+            # (i = 0 adds nothing, log_f = 0 applies no decay) — the padded
+            # chunk tail leaves the carried state untouched, matching the
+            # zero-padding of the monolithic path below.
+            keep = (jnp.arange(S) < valid_len)[None, None, :]
+            i_g = i_g * keep
+            lf = lf * keep
         pad = (-S) % chunk
         Kc = min(chunk, S + pad)
         nch = (S + pad) // Kc
@@ -302,8 +328,11 @@ def mlstm(params: Params, x: jax.Array, cfg: ModelConfig,
             y, S1, n1 = _mlstm_chunk(qx, kx, vx, fx, ix, S0, n0)
             return (S1, n1), y
 
-        S0 = jnp.zeros((B, H, D, D), jnp.float32)
-        n0 = jnp.zeros((B, H, D), jnp.float32)
+        if cache is not None:
+            S0, n0 = cache["S"], cache["n"]
+        else:
+            S0 = jnp.zeros((B, H, D, D), jnp.float32)
+            n0 = jnp.zeros((B, H, D), jnp.float32)
         if cfg.unroll_chunks and nch <= 32:  # cost probes (cap: compile time)
             carry, ys_l = (S0, n0), []
             for t in range(nch):
@@ -313,7 +342,8 @@ def mlstm(params: Params, x: jax.Array, cfg: ModelConfig,
         else:
             (S1, n1), ys = jax.lax.scan(step, (S0, n0), (qc, kc, vc, ic, fc))
         y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S + pad, D)[:, :, :S]
-        new_cache = {"S": S1, "n": n1} if make_cache else None
+        new_cache = ({"S": S1, "n": n1}
+                     if (make_cache or cache is not None) else None)
 
     y = y.transpose(0, 2, 1, 3).reshape(B, -1, di).astype(x.dtype)
     y = rmsnorm(params["norm"], y, cfg.norm_eps)
@@ -354,7 +384,7 @@ def slstm_specs(cfg: ModelConfig) -> Params:
 
 def slstm(params: Params, x: jax.Array, cfg: ModelConfig,
           cache: Optional[Params] = None, chunk: int = 128,
-          make_cache: bool = False
+          make_cache: bool = False, valid_len: Optional[jax.Array] = None
           ) -> Tuple[jax.Array, Optional[Params]]:
     B, S, d = x.shape
     H = cfg.ssm_heads
@@ -364,7 +394,13 @@ def slstm(params: Params, x: jax.Array, cfg: ModelConfig,
 
     r_g = params["r_gates"]
 
-    def step(carry, p_t):
+    def step(carry, inp):
+        # The hidden-to-hidden recurrence has no zero-input identity (the
+        # gate biases alone move the state), so padded steps carry an
+        # explicit keep flag and are skipped via select — the carried state
+        # is the state after exactly the valid tokens, for the monolithic
+        # scan's chunk padding and the chunked-prefill tail alike.
+        p_t, ok = inp
         c, n, h = carry                                 # (B,H,D) each
         rec = jnp.einsum("bhd,hdg->bhg", h, r_g)        # (B,H,4D)
         g = p_t.reshape(B, H, 4 * D) + rec
@@ -373,25 +409,34 @@ def slstm(params: Params, x: jax.Array, cfg: ModelConfig,
         f_ = jax.nn.sigmoid(f_)
         z_ = jnp.tanh(z_)
         o_ = jax.nn.sigmoid(o_)
-        c = f_ * c + i_ * z_
-        n = f_ * n + i_
-        h = o_ * c / jnp.maximum(jnp.abs(n), 1.0)
-        return (c, n, h), h
+        c2 = f_ * c + i_ * z_
+        n2 = f_ * n + i_
+        h2 = o_ * c2 / jnp.maximum(jnp.abs(n2), 1.0)
+        carry = tuple(jnp.where(ok, new, old)
+                      for new, old in ((c2, c), (n2, n), (h2, h)))
+        return carry, carry[2]
 
-    if cache is not None:
+    if cache is not None and S == 1:
         carry = (cache["c"], cache["n"], cache["h"])
-        carry, h = step(carry, pre[:, 0])
+        carry, h = step(carry, (pre[:, 0], jnp.bool_(True)))
         y = h[:, None]
         new_cache = dict(zip(("c", "n", "h"), carry))
     else:
-        zero = jnp.zeros((B, H, D), jnp.float32)
+        if cache is not None:
+            carry0 = (cache["c"], cache["n"], cache["h"])
+        else:
+            zero = jnp.zeros((B, H, D), jnp.float32)
+            carry0 = (zero, zero, zero)
+        n_valid = jnp.int32(S) if valid_len is None else valid_len
         pad = (-S) % chunk
-        xs = jnp.pad(pre, ((0, 0), (0, pad), (0, 0))).swapaxes(0, 1)
-        carry, ys = chunked_scan(step, (zero, zero, zero), xs,
+        keep = jnp.pad(jnp.arange(S) < n_valid, (0, pad))
+        xs = (jnp.pad(pre, ((0, 0), (0, pad), (0, 0))).swapaxes(0, 1), keep)
+        carry, ys = chunked_scan(step, carry0, xs,
                                  chunk=min(chunk, S + pad),
                                  unroll_outer=cfg.unroll_chunks)
         y = ys[:S].swapaxes(0, 1)
-        new_cache = dict(zip(("c", "n", "h"), carry)) if make_cache else None
+        new_cache = (dict(zip(("c", "n", "h"), carry))
+                     if (make_cache or cache is not None) else None)
 
     y = y.reshape(B, -1, d).astype(x.dtype)
     y = rmsnorm(params["norm"], y, cfg.norm_eps)

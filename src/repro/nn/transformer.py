@@ -116,8 +116,11 @@ def apply_block(
     make_cache: bool = False,
     cache_len: int = 0,
     page_table=None,
+    valid_len=None,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).  ``valid_len`` marks how many of a
+    chunked-prefill chunk's tokens are real (recurrent layers freeze their
+    state past it; attention masks make it irrelevant there)."""
     kind = layer_kind(cfg, i)
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
@@ -125,7 +128,7 @@ def apply_block(
     if kind in ("mlstm", "slstm"):
         fn = mlstm if kind == "mlstm" else slstm
         y, new_cache = fn(bp["cell"], h, cfg, cache=cache,
-                          make_cache=make_cache)
+                          make_cache=make_cache, valid_len=valid_len)
         x = x + y
         x = shard(x, "batch", "sp", None)
         return x, new_cache, aux
@@ -141,7 +144,8 @@ def apply_block(
     if kind == "hybrid":
         mamba_cache = cache.get("mamba") if cache else None
         y_ssm, new_mamba_cache = mamba(bp["mamba"], h, cfg, cache=mamba_cache,
-                                       make_cache=make_cache)
+                                       make_cache=make_cache,
+                                       valid_len=valid_len)
         # hymba: mean of the two normalized branch outputs
         y = 0.5 * (y_attn + y_ssm)
         if new_attn_cache is not None or new_mamba_cache is not None:
@@ -155,7 +159,11 @@ def apply_block(
     x = shard(x, "batch", "sp", None)
     h2 = rmsnorm(bp["norm2"], x, cfg.norm_eps)
     if "moe" in bp:
-        y2, aux = moe(bp["moe"], h2, cfg, decode=(cache is not None))
+        # multi-token chunked prefill takes the batch routing path (same
+        # numerics as the monolithic prefill); only true one-token steps
+        # use the replicated-token decode strategy
+        y2, aux = moe(bp["moe"], h2, cfg,
+                      decode=(cache is not None and x.shape[1] == 1))
     else:
         y2 = mlp(bp["mlp"], h2, cfg.act)
     x = x + y2
@@ -228,6 +236,7 @@ def apply_stack(
     make_cache: bool = False,
     cache_len: int = 0,
     page_table=None,
+    valid_len=None,
 ) -> Tuple[jax.Array, Optional[Any], jax.Array]:
     aux_total = jnp.zeros((), jnp.float32)
     plan = stack_plan(cfg)
@@ -241,7 +250,7 @@ def apply_stack(
             apply_block, cfg=cfg, i=start, positions=positions,
             prefix_len=prefix_len, cache_pos=cache_pos,
             make_cache=make_cache, cache_len=cache_len,
-            page_table=page_table)
+            page_table=page_table, valid_len=valid_len)
 
         if not scanned:
             if cfg.remat and seg_cache is None and not make_cache:

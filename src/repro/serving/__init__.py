@@ -4,6 +4,7 @@ paged KV-cache arenas (block page tables, refcounted prefix sharing, COW),
 multi-model weight-arena residency with cross-tenant §V-C delta reuse and a
 tick-budgeted install pipeline that overlaps tenant switches with decode,
 and an engine metrics surface (drivable on a deterministic VirtualClock)."""
+from repro.serving.bucketing import PrefillProgress, bucket_for, bucket_ladder
 from repro.serving.engine import EngineModel, ServingEngine
 from repro.serving.harness import drive_simulated
 from repro.serving.kv_arena import KVArena
@@ -21,4 +22,5 @@ __all__ = [
     "Request", "RequestStatus", "InstallPipeline", "InstallCostModel",
     "WeightResidencyManager", "SchedulerConfig", "StepScheduler",
     "drive_simulated", "request_key", "sample_token",
+    "PrefillProgress", "bucket_for", "bucket_ladder",
 ]

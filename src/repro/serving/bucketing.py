@@ -1,0 +1,67 @@
+"""Prompt-length bucketing and chunked-prefill progress tracking.
+
+jit specializes a prefill on every input length, so an engine fed arbitrary
+prompt lengths compiles an unbounded family of executables.  Chunking fixes
+most of it for free — every full chunk is exactly `prefill_chunk` tokens —
+and the geometric bucket ladder bounds the rest: the final partial chunk is
+padded up to the nearest ladder rung, so the number of distinct traces is
+at most the ladder size (`O(log_growth(chunk))`) instead of one per prompt
+length.  This is the FPSA/ARAS full-stack argument at the compiler level: a
+fixed set of compiled tiles serves arbitrary workloads because the
+scheduler slices and pads work to fit them.
+
+Ladder guarantees (property-tested in tests/test_chunked_prefill.py):
+  * coverage   — bucket_for(n) >= n for every n <= the top rung;
+  * monotone   — rungs strictly increase, bucket_for is non-decreasing;
+  * bounded waste — bucket_for(n) <= growth * n: a rung r is followed by at
+    most ceil(r * growth), so any n > r pays at most (r·g + 1)/(r + 1) <= g
+    padding overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Tuple
+
+
+def bucket_ladder(lo: int, hi: int, growth: float) -> List[int]:
+    """Geometric rungs lo, ~lo·g, ... capped at hi (always the top rung)."""
+    if lo < 1 or hi < 1:
+        raise ValueError("ladder bounds must be >= 1")
+    if growth <= 1.0:
+        raise ValueError("bucket growth must be > 1 (use bucketing=off "
+                         "instead of a degenerate ladder)")
+    if hi <= lo:
+        return [hi]
+    rungs = [lo]
+    while rungs[-1] < hi:
+        rungs.append(min(max(math.ceil(rungs[-1] * growth),
+                             rungs[-1] + 1), hi))
+    return rungs
+
+
+def bucket_for(n: int, ladder: List[int]) -> int:
+    """Smallest rung >= n (the top rung for anything larger)."""
+    for rung in ladder:
+        if rung >= n:
+            return rung
+    return ladder[-1]
+
+
+@dataclasses.dataclass
+class PrefillProgress:
+    """Chunked-prefill state of one request: the prompt being prefilled,
+    the batch-1 staging cache the chunks accumulate into, and how far they
+    got.  Survives mid-prefill preemption — pages/slots are released, but
+    the staging (per-request memory, not pool) keeps every completed
+    chunk's K/V, so readmission resumes at `done` instead of re-running
+    the prompt."""
+    tokens: Tuple[int, ...]          # full serving prompt (incl. generated)
+    caches: Any                      # batch-1 staging cache pytree
+    done: int = 0                    # prompt tokens prefilled so far
+    logits: Any = None               # final chunk's next-token logits
+    start_t: Optional[float] = None  # first chunk launch (TTFT split)
+
+    @property
+    def finished(self) -> bool:
+        return self.done >= len(self.tokens)

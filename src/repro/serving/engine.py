@@ -14,6 +14,16 @@ on a fixed device budget:
     prefill runs immediately and yields their first token), then decodes
     one token for every active slot of the scheduled tenants in a single
     batched, per-slot-position decode step (`launch.steps.cached_serve_step`);
+  * with `prefill_chunk > 0` a prompt's prefill is instead split into
+    chunk-sized pieces spread across steps under the scheduler's
+    prefill-token budget (ARAS §V: slice oversized work into
+    scheduler-sized pieces and overlap it with ongoing compute), so long
+    prompts no longer stall concurrent decodes; tail chunks are padded to
+    a geometric bucket ladder so distinct prefill jit traces stay bounded
+    by the ladder size instead of growing with every new prompt length.
+    Chunked and monolithic prefill are token-for-token identical on both
+    KV layouts (tests/test_chunked_prefill.py) — except xLSTM tenants,
+    whose chunkwise-parallel mLSTM groups floats differently per chunking;
   * a `WeightResidencyManager` decides which tenant's quantized layer codes
     occupy the device weight slots, delta-installing on tenant switches and
     reporting wire bytes saved by §V-C cross-tenant reuse;
@@ -42,9 +52,14 @@ from typing import Any, Callable, Dict, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import (cached_paged_serve_step, cached_prefill_step,
-                                cached_serve_step)
+from repro.launch.steps import (cached_chunk_prefill_step,
+                                cached_paged_serve_step, cached_prefill_step,
+                                cached_serve_step, cached_stage_install,
+                                cached_stage_quantize, prefill_cache_info)
 from repro.nn.config import ModelConfig
+from repro.nn.model import init_cache
+from repro.serving.bucketing import (PrefillProgress, bucket_for,
+                                     bucket_ladder)
 from repro.serving.kv_arena import KVArena
 from repro.serving.metrics import EngineMetrics, StepRecord
 from repro.serving.paging import PagedKVArena
@@ -86,7 +101,10 @@ class ServingEngine:
                  clock: Callable[[], float] = time.perf_counter,
                  install_ticks_per_step: int = 0,
                  overlap_installs: bool = False,
-                 install_cost: Optional[InstallCostModel] = None):
+                 install_cost: Optional[InstallCostModel] = None,
+                 prefill_chunk: int = 0,
+                 bucket_growth: float = 2.0,
+                 bucket_min: int = 8):
         if not models:
             raise ValueError("need at least one tenant model")
         names = [m.name for m in models]
@@ -140,13 +158,45 @@ class ServingEngine:
             InstallPipeline(self.residency, self.install_cost)
             if self._ticks_per_step > 0 else None)
 
+        # Chunked prefill: prefill_chunk > 0 splits every prompt into
+        # chunk-sized pieces run across steps under the scheduler's
+        # prefill-token budget (queued → PREFILLING(k chunks done) →
+        # RUNNING), so a long prompt never freezes concurrent decodes.
+        # Each chunk runs against a fixed-length staging cache and the tail
+        # chunk is padded up to a geometric bucket ladder rung, bounding
+        # distinct prefill jit traces at the ladder size (bucket_growth <=
+        # 1 disables the padding: traces then grow with every new tail
+        # length).  0 keeps the legacy monolithic per-prompt-length
+        # prefill.
+        self._chunk = int(prefill_chunk)
+        if self._chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0 (0 = monolithic)")
+        self._ladder: Optional[list] = None
+        if self._chunk > 0 and bucket_growth > 1.0:
+            self._ladder = bucket_ladder(min(bucket_min, self._chunk),
+                                         self._chunk, bucket_growth)
+        self._prefills: Dict[int, PrefillProgress] = {}
+        self._staging_len: Dict[str, int] = {}
+        if self._chunk > 0:
+            for m in models:
+                cap = (self.arenas[m.name].max_tokens
+                       if m.kv_layout == "paged" else m.max_seq)
+                # One fixed staging length per tenant: rounded up to a
+                # chunk multiple so a bucket-padded tail always fits (the
+                # install slices back down).  A single length keeps the
+                # trace bound at O(ladder); the cost is that every
+                # in-flight prefill holds a max-capacity staging cache
+                # even for short prompts (a staging-length ladder would
+                # trade traces for memory — ROADMAP follow-up).
+                self._staging_len[m.name] = -(-cap // self._chunk) * self._chunk
+
     # ------------------------------------------------------------ intake
     def _prefill_fn(self, name: str, prompt_len: int):
-        """Slot tenants prefill into a fixed max_seq cache; paged tenants
-        into a page-multiple bucket so installs write whole pages.  NB the
-        prompt itself is not padded, so jit still traces per prompt length
-        (same as the slot path) — bounding compile counts needs padded
-        prefill with masking (ROADMAP: prefill chunking/bucketing)."""
+        """Legacy monolithic prefill (prefill_chunk == 0): slot tenants
+        prefill into a fixed max_seq cache; paged tenants into a
+        page-multiple bucket so installs write whole pages.  NB the prompt
+        itself is not padded, so jit traces once per prompt length — the
+        chunked path (`_pump_prefills`) is what bounds compile counts."""
         m = self.models[name]
         arena = self.arenas[name]
         if isinstance(arena, PagedKVArena):
@@ -189,8 +239,13 @@ class ServingEngine:
 
     def preempt(self, rid: int) -> None:
         """Evict a running request's KV slot and requeue it; its generated
-        prefix is re-prefilled on readmission, so no tokens are lost."""
+        prefix is re-prefilled on readmission, so no tokens are lost.  A
+        mid-prefill (chunked) request keeps its staging and resumes at the
+        last completed chunk instead."""
         req = self.requests[rid]
+        if req.status is RequestStatus.PREFILLING:
+            self._preempt_prefill(req)
+            return
         if req.status is not RequestStatus.RUNNING:
             return
         self.arenas[req.model].evict(req.slot)
@@ -213,7 +268,7 @@ class ServingEngine:
                             key=request_key(req.seed, req.rid),
                             step=len(req.generated))
 
-    def _admit(self, allowed) -> int:
+    def _admit(self, allowed) -> tuple:
         """Admit queued requests of the scheduled (weight-resident) tenants
         only — a prefill never computes on a tenant whose layer codes are
         not installed in the weight arena.  Slot tenants gate on a free
@@ -231,6 +286,7 @@ class ServingEngine:
 
         admits = self.scheduler.next_admits(free, n_active, can_admit)
         n_admitted = 0
+        n_tokens = 0
         for req in admits:
             m = self.models[req.model]
             arena = self.arenas[req.model]
@@ -247,10 +303,16 @@ class ServingEngine:
                     continue
             else:
                 slot = arena.alloc(req.rid)
+            if req.prefill_start_t is None:
+                # re-prefills after preemption keep the FIRST admission
+                # time: the ttft split describes the road to the first
+                # token, which a later re-prefill is not on
+                req.prefill_start_t = self._clock()
             tokens = jnp.asarray(prompt, jnp.int32)[None]
             logits, caches = self._prefill_fn(req.model, len(prompt))(
                 m.params, {"tokens": tokens})
             tok = self._pick_token(req, logits[0])
+            n_tokens += len(prompt)
             if isinstance(arena, PagedKVArena):
                 arena.install(slot, caches, tok, prompt)
             else:
@@ -264,7 +326,7 @@ class ServingEngine:
             if req.done:
                 self._finish(req)
             n_admitted += 1
-        return n_admitted
+        return n_admitted, n_tokens
 
     def _finish(self, req: Request) -> None:
         self.arenas[req.model].evict(req.slot)
@@ -272,6 +334,149 @@ class ServingEngine:
         req.status = RequestStatus.FINISHED
         req.finish_t = self._clock()
         self.metrics.record_finish(req)
+
+    # ------------------------------------------------- chunked prefill
+    def _admit_staged(self, allowed) -> None:
+        """Chunked-prefill admission: claim a slot/row and a staging cache,
+        but run no model yet — chunks run under _pump_prefills' token
+        budget.  A preempted mid-prefill request re-enters here with its
+        PrefillProgress intact and resumes at the last completed chunk."""
+        free = {name: (arena.n_free if name in allowed else 0)
+                for name, arena in self.arenas.items()}
+        n_active = sum(len(a.active_slots()) for a in self.arenas.values())
+
+        def can_admit(req: Request) -> bool:
+            arena = self.arenas[req.model]
+            if isinstance(arena, PagedKVArena):
+                return arena.can_admit(req.serving_prompt())
+            return True
+
+        for req in self.scheduler.next_admits(free, n_active, can_admit):
+            arena = self.arenas[req.model]
+            prompt = req.serving_prompt()
+            if isinstance(arena, PagedKVArena):
+                row = arena.stage(req.rid, prompt)
+                if row is None:
+                    # an earlier admit this step consumed the row the
+                    # pre-pop check saw; head-of-queue retry next step
+                    self.scheduler.requeue(req)
+                    req.status = RequestStatus.QUEUED
+                    continue
+            else:
+                row = arena.alloc(req.rid)
+            req.slot = row
+            req.status = RequestStatus.PREFILLING
+            st = self._prefills.get(req.rid)
+            if st is None or st.tokens != prompt:
+                # fresh prefill (or a decode-preempted request whose prompt
+                # grew by its generated tokens): new staging from zeros
+                m = self.models[req.model]
+                self._prefills[req.rid] = PrefillProgress(
+                    tokens=prompt,
+                    caches=init_cache(m.cfg, 1,
+                                      self._staging_len[req.model],
+                                      staging=True))
+
+    def _run_chunk(self, req: Request, st: PrefillProgress) -> int:
+        """Advance one chunk; returns valid tokens processed, or -1 when a
+        paged tenant could not reserve the chunk's pages (the prefill is
+        preempted, staging intact, and resumes once pages free up)."""
+        m = self.models[req.model]
+        arena = self.arenas[req.model]
+        start = st.done
+        remaining = len(st.tokens) - start
+        size = min(self._chunk, remaining)
+        if isinstance(arena, PagedKVArena):
+            if not arena.grow(req.rid, arena.blocks_for(start + size)):
+                self._preempt_prefill(req)
+                return -1
+        if remaining > self._chunk:
+            padded = self._chunk
+        elif self._ladder is not None:
+            padded = bucket_for(remaining, self._ladder)
+        else:
+            padded = remaining
+        buf = np.zeros((1, padded), np.int32)
+        buf[0, :size] = st.tokens[start:start + size]
+        if st.start_t is None:
+            st.start_t = self._clock()
+            if req.prefill_start_t is None:
+                # a decode-preempted request re-prefilling its generated
+                # prefix keeps its original first-chunk stamp: the ttft
+                # split describes the road to the FIRST token only
+                req.prefill_start_t = st.start_t
+        step_fn = cached_chunk_prefill_step(
+            m.cfg, padded, self._staging_len[req.model])
+        logits, st.caches = step_fn(m.params, jnp.asarray(buf), st.caches,
+                                    jnp.int32(start), jnp.int32(size))
+        st.done += size
+        if st.finished:
+            st.logits = logits
+        return size
+
+    def _finish_prefill(self, req: Request, st: PrefillProgress) -> None:
+        """Last chunk done: install the staging cache into the arena (ring
+        + slice + int8 quantization for slot rows; per-page scatter of the
+        non-shared blocks for paged rows), emit the first token (TTFT), and
+        hand the request to the decode batch."""
+        m = self.models[req.model]
+        arena = self.arenas[req.model]
+        tok = self._pick_token(req, st.logits[0])
+        n_tok = len(st.tokens)
+        staging_len = self._staging_len[req.model]
+        if isinstance(arena, PagedKVArena):
+            source = st.caches
+            if m.cfg.kv_cache_dtype == "int8":
+                source = cached_stage_quantize(m.cfg, staging_len)(source)
+            arena.finish_stage(req.slot, source, tok, st.tokens)
+        else:
+            row = cached_stage_install(m.cfg, staging_len, m.max_seq)(
+                st.caches, jnp.int32(n_tok))
+            arena.install(req.slot, row, tok, n_tok)
+        del self._prefills[req.rid]
+        req.status = RequestStatus.RUNNING
+        req.generated.append(tok)
+        req.note_token(self._clock())
+        if req.first_token_t is None:
+            req.first_token_t = self._clock()
+        if req.done:
+            self._finish(req)
+
+    def _preempt_prefill(self, req: Request) -> None:
+        """Mid-prefill preemption: release the slot/row and any reserved
+        pages, keep the PrefillProgress (staging is per-request memory, not
+        pool), and requeue at the head — readmission resumes at the last
+        completed chunk."""
+        self.arenas[req.model].evict(req.slot)
+        req.slot = None
+        req.preemptions += 1
+        self.metrics.record_preemption()
+        self.scheduler.requeue(req)
+
+    def _pump_prefills(self, allowed) -> tuple:
+        """One step of chunked-prefill work: admit queued requests into
+        staging, then advance in-flight prefills (FIFO by rid) under the
+        scheduler's prefill-token budget.  Returns (prefills completed,
+        prompt tokens processed, chunks run)."""
+        self._admit_staged(allowed)
+        budget = self.scheduler.prefill_token_budget()
+        n_done = tokens = chunks = 0
+        for rid in sorted(self._prefills):
+            req = self.requests[rid]
+            if (req.status is not RequestStatus.PREFILLING
+                    or req.model not in allowed):
+                continue
+            while not self._prefills[rid].finished and tokens < budget:
+                n = self._run_chunk(req, self._prefills[rid])
+                if n < 0:
+                    break
+                tokens += n
+                chunks += 1
+            if (req.status is RequestStatus.PREFILLING
+                    and self._prefills[rid].finished):
+                self._finish_prefill(req, self._prefills[rid])
+                n_done += 1
+        return n_done, tokens, chunks
 
     def _can_progress(self, name: str) -> bool:
         """A tenant belongs in the turn rotation only if scheduling it can
@@ -281,6 +486,8 @@ class ServingEngine:
         budget-blocked queued-only tenant and livelock the engine."""
         arena = self.arenas[name]
         if arena.active_slots():
+            # includes PREFILLING rows: the tenant must be scheduled (and
+            # weight-resident) for its chunks to advance
             return True
         if arena.n_free == 0:
             return False
@@ -360,22 +567,37 @@ class ServingEngine:
         else:
             decodable, wire, work = self._pump_installs(run_models, demand)
 
-        n_prefills = self._admit(set(decodable))
+        if self._chunk > 0:
+            n_prefills, prefill_tokens, n_chunks = (
+                self._pump_prefills(set(decodable)))
+        else:
+            n_prefills, prefill_tokens = self._admit(set(decodable))
+            n_chunks = 0
 
         n_decoded = 0
         for name in decodable:
             m = self.models[name]
             arena = self.arenas[name]
             paged = isinstance(arena, PagedKVArena)
+
+            def decoding(slot) -> bool:
+                # PREFILLING rows sit in the arena (their slot is claimed,
+                # their pages reserved) but are not in the decode batch yet:
+                # the batched step still computes their row, whose write
+                # lands in the scratch page (paged) or is overwritten by
+                # the install (slot) and whose output is discarded here
+                s = self.requests[arena.owner_of(slot)].status
+                return s is RequestStatus.RUNNING
+
             if paged:
                 # extend tables across page boundaries and COW shared pages
                 # before the step writes; pool exhaustion preempts (the
                 # request re-prefills once pages free up — ARAS-style
                 # adaptation to the occupancy map, not a hard failure)
                 for slot in arena.active_slots():
-                    if not arena.prepare_decode(slot):
+                    if decoding(slot) and not arena.prepare_decode(slot):
                         self.preempt(arena.owner_of(slot))
-            slots = arena.active_slots()
+            slots = [s for s in arena.active_slots() if decoding(s)]
             if not slots:
                 continue
             if paged:
@@ -400,7 +622,7 @@ class ServingEngine:
 
         tokens_out = n_decoded + n_prefills
         stall = (bool(run_models) and len(decodable) < len(run_models)
-                 and tokens_out == 0)
+                 and tokens_out == 0 and prefill_tokens == 0)
         if stall:
             # the step produced nothing because the scheduled tenant sat
             # waiting on installs — don't charge it a decode-slice step
@@ -422,7 +644,9 @@ class ServingEngine:
             kv_total_pages=kv_total,
             install_work_bytes=work,
             overlap_hidden_bytes=work if tokens_out > 0 else 0,
-            install_stall=stall))
+            install_stall=stall,
+            prefill_tokens=prefill_tokens,
+            n_prefill_chunks=n_chunks))
         self._step_no += 1
         self._wall_s += self._clock() - now
 
@@ -438,10 +662,12 @@ class ServingEngine:
             if max_steps is not None and self._step_no >= max_steps:
                 break
             before = self.metrics.tokens_generated
+            chunks_before = self.metrics.prefill_tokens
             ticks_before = self.pipeline.pumped_ticks if self.pipeline else 0
             self.step()
             progressed = (
                 self.metrics.tokens_generated != before
+                or self.metrics.prefill_tokens != chunks_before
                 or (self.pipeline is not None
                     and self.pipeline.pumped_ticks != ticks_before))
             stall = 0 if progressed else stall + 1
@@ -459,7 +685,8 @@ class ServingEngine:
             self._wall_s if wall_s is None else wall_s,
             residency=self.residency.stats.as_dict(),
             rejected=self.scheduler.rejected,
-            paging=self._paging_stats())
+            paging=self._paging_stats(),
+            prefill_cache=prefill_cache_info() if self._chunk > 0 else None)
 
     def _paging_stats(self) -> Optional[Dict[str, float]]:
         """Aggregate paged-arena stats across tenants (None when every

@@ -16,16 +16,23 @@ Job = Tuple[float, str, Sequence[int], int]   # (arrival_t, model, prompt, gen)
 def drive_simulated(eng, clock, jobs: Iterable[Job], *, dt: float = 1.0,
                     max_steps: int = 100_000,
                     before_step: Optional[Callable] = None,
-                    after_step: Optional[Callable] = None
+                    after_step: Optional[Callable] = None,
+                    step_dt: Optional[Callable] = None
                     ) -> Dict[str, float]:
     """Drive `eng` over `jobs` in virtual time and return its summary.
 
     Each iteration submits every job whose arrival time has passed, steps
     the engine if it has work, and advances `clock` by `dt` (idle waits
-    included, so arrival gaps cost virtual time too).  `before_step` /
-    `after_step` hooks receive the engine around each step — the tests use
-    them to assert invariants mid-flight.  Raises RuntimeError instead of
-    spinning forever if the workload does not drain within `max_steps`.
+    included, so arrival gaps cost virtual time too).  `step_dt`, when
+    given, is a per-step cost model: it receives the just-recorded
+    StepRecord and returns that step's virtual duration — how the chunked
+    prefill benchmarks charge a step for the prompt tokens it prefilled
+    (`rec.prefill_tokens`), so a monolithic long prefill shows up as one
+    long step while a budgeted chunked prefill shows up as several short
+    ones.  Idle iterations (no step) always advance by `dt`.  `before_step`
+    / `after_step` hooks receive the engine around each step — the tests
+    use them to assert invariants mid-flight.  Raises RuntimeError instead
+    of spinning forever if the workload does not drain within `max_steps`.
     """
     pending = sorted(jobs)
     for _ in range(max_steps):
@@ -34,13 +41,18 @@ def drive_simulated(eng, clock, jobs: Iterable[Job], *, dt: float = 1.0,
         while pending and pending[0][0] <= clock.t:
             _, model, prompt, gen = pending.pop(0)
             eng.submit(model, prompt, max_new_tokens=gen)
+        stepped = False
         if eng.has_work():
             if before_step is not None:
                 before_step(eng)
             eng.step()
+            stepped = True
             if after_step is not None:
                 after_step(eng)
-        clock.advance(dt)
+        if stepped and step_dt is not None:
+            clock.advance(step_dt(eng.metrics.steps[-1]))
+        else:
+            clock.advance(dt)
     else:
         raise RuntimeError(
             f"simulated drive did not drain the workload in {max_steps} "

@@ -52,6 +52,11 @@ class StepRecord:
     install_work_bytes: int = 0
     overlap_hidden_bytes: int = 0
     install_stall: bool = False
+    # chunked prefill: prompt tokens of chunk work this step (monolithic
+    # prefills count their whole prompt here) and chunks launched — the
+    # virtual-clock cost models charge step time against prefill_tokens
+    prefill_tokens: int = 0
+    n_prefill_chunks: int = 0
 
 
 class EngineMetrics:
@@ -61,11 +66,15 @@ class EngineMetrics:
         self.tokens_generated = 0
         self.max_concurrent = 0
         self.preemptions = 0
+        self.prefill_tokens = 0
+        self.prefill_chunks = 0
 
     def record_step(self, rec: StepRecord) -> None:
         self.steps.append(rec)
         self.max_concurrent = max(self.max_concurrent, rec.n_active)
         self.tokens_generated += rec.n_decoded + rec.n_prefills
+        self.prefill_tokens += rec.prefill_tokens
+        self.prefill_chunks += rec.n_prefill_chunks
 
     def record_finish(self, req: Request) -> None:
         self.finished.append(req)
@@ -76,10 +85,15 @@ class EngineMetrics:
     def summary(self, wall_s: float,
                 residency: Optional[Dict[str, float]] = None,
                 rejected: int = 0,
-                paging: Optional[Dict[str, float]] = None
+                paging: Optional[Dict[str, float]] = None,
+                prefill_cache: Optional[Dict[str, int]] = None
                 ) -> Dict[str, float]:
         lat = [r.latency for r in self.finished if r.latency is not None]
         ttft = [r.ttft for r in self.finished if r.ttft is not None]
+        ttft_q = [r.ttft_queue for r in self.finished
+                  if r.ttft_queue is not None]
+        ttft_p = [r.ttft_prefill for r in self.finished
+                  if r.ttft_prefill is not None]
         itl = [r.max_itl for r in self.finished if r.max_itl is not None]
         depths = [s.queue_depth for s in self.steps]
         out = {
@@ -91,6 +105,14 @@ class EngineMetrics:
             "latency_p95_s": _pct(lat, 95),
             "ttft_p50_s": _pct(ttft, 50),
             "ttft_p95_s": _pct(ttft, 95),
+            # TTFT split: queued-for-admission vs chunk-prefilling time (a
+            # prefill-token budget trades the latter against decode ITL)
+            "ttft_queue_p50_s": _pct(ttft_q, 50),
+            "ttft_queue_p95_s": _pct(ttft_q, 95),
+            "ttft_prefill_p50_s": _pct(ttft_p, 50),
+            "ttft_prefill_p95_s": _pct(ttft_p, 95),
+            "prefill_tokens": float(self.prefill_tokens),
+            "prefill_chunks": float(self.prefill_chunks),
             # worst inter-token gap per request: the tenant-boundary stall a
             # mean latency hides (install stalls land exactly here)
             "itl_max_p50_s": _pct(itl, 50),
@@ -108,6 +130,12 @@ class EngineMetrics:
                 sum(s.overlap_hidden_bytes for s in self.steps)),
             "wall_s": wall_s,
         }
+        if prefill_cache:
+            # jit-trace accounting from launch.steps.prefill_cache_info —
+            # process-wide (step caches are shared across engine instances
+            # of one config), so read deltas when comparing arms
+            out.update({f"prefill_cache_{k}": float(v)
+                        for k, v in prefill_cache.items()})
         if residency:
             out.update(residency)
         if paging:
@@ -152,6 +180,13 @@ def format_summary(s: Dict[str, float]) -> str:
             f"{s['install_raw_bytes']/1e6:.2f} MB raw "
             f"(saved {s['install_savings']:.1%}, "
             f"skip {s['install_mean_skip']:.1%})")
+    if s.get("prefill_chunks", 0):
+        lines.append(
+            f"chunked prefill: {int(s['prefill_tokens'])} prompt tokens in "
+            f"{int(s['prefill_chunks'])} chunks; ttft queue/prefill p95 "
+            f"{s['ttft_queue_p95_s']*1e3:.1f}/{s['ttft_prefill_p95_s']*1e3:.1f}"
+            f" ms; {int(s.get('prefill_cache_traces', 0))} prefill traces "
+            f"process-wide")
     if s.get("install_work_bytes", 0) or s.get("install_stall_steps", 0):
         hidden = s["overlap_hidden_bytes"]
         work = max(s["install_work_bytes"], 1.0)

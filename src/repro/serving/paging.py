@@ -160,6 +160,40 @@ class PageAllocator:
         self.tables[rid] = table
         return table, len(shared)
 
+    def begin_table(self, rid: int, tokens: Tuple[int, ...]) -> int:
+        """Chunked-prefill admission: open rid's table with just the shared
+        prefix pages (refcounted now — sharing is checked against the whole
+        prompt, which is known up front).  Fresh pages for the non-shared
+        tail are reserved chunk by chunk via grow_table — admission still
+        gates on the whole footprint being free (lax admission would churn
+        reservations without progress), but decode neighbors allocate and
+        free pages while the prefill runs, and a reservation that loses
+        that race fails cleanly at grow_table instead of corrupting
+        anything.  Returns the number of shared pages."""
+        if rid in self.tables:
+            raise ValueError(f"rid {rid} already holds a table")
+        shared = self.match_prefix(tokens)
+        for page in shared:
+            self.refcount[page] += 1
+            self.shared_hits += 1
+        self.tables[rid] = list(shared)
+        return len(shared)
+
+    def grow_table(self, rid: int, n_blocks: int) -> bool:
+        """Reserve fresh pages until rid's table covers `n_blocks` blocks
+        (one prefill chunk's worth at a time).  False with *no side effects*
+        when the pool cannot cover the growth — the caller preempts the
+        prefill and resumes it at the last completed chunk once pages free
+        up."""
+        need = n_blocks - len(self.tables[rid])
+        if need <= 0:
+            return True
+        if need > self.n_free:
+            return False
+        for _ in range(need):
+            self.tables[rid].append(self._alloc_page())
+        return True
+
     def extend(self, rid: int) -> Optional[int]:
         """Append one fresh page to rid's table (decode crossed a page
         boundary).  None when the pool is exhausted — the caller preempts."""
@@ -381,6 +415,49 @@ class PagedKVArena:
             self.caches = self._write(self.caches, one_caches,
                                       jnp.int32(i), jnp.int32(table[i]))
         self.allocator.register(rid, tuple(tokens))
+        self.pos[row] = len(tokens)
+        self.last_token[row] = first_token
+
+    # --------------------------------------------- chunked-prefill staging
+    def stage(self, rid: int, tokens: Tuple[int, ...]) -> Optional[int]:
+        """Chunked-prefill admission: claim a decode row and open a
+        chunk-granular page reservation (shared prefix pages refcounted now,
+        fresh pages reserved per chunk via grow()).  The row's device page
+        table stays aimed at the scratch page until finish_stage — the
+        batched decode step may write junk through this row meanwhile, and
+        it must land in the scratch page, not in reserved real pages."""
+        if not self._free_rows:
+            return None
+        n_shared = self.allocator.begin_table(rid, tuple(tokens))
+        row = self._free_rows.popleft()
+        self.owner[row] = rid
+        self._n_shared[rid] = n_shared
+        self.tables_np[row, :] = 0
+        self.pos[row] = 0
+        self.last_token[row] = 0
+        return row
+
+    def grow(self, rid: int, n_blocks: int) -> bool:
+        """Reserve pages for the next prefill chunk; False = pool exhausted
+        (the engine preempts the prefill, staging intact)."""
+        return self.allocator.grow_table(rid, n_blocks)
+
+    def finish_stage(self, row: int, staging: Any, first_token: int,
+                     tokens: Tuple[int, ...]) -> None:
+        """Last chunk done: scatter the staged K/V into the reserved
+        non-shared pages (shared prefix pages already hold identical
+        values), publish the prefix, point the row's device table at the
+        real pages, and arm decode state."""
+        rid = self.owner[row]
+        table = self.allocator.tables[rid]
+        assert len(table) == self.blocks_for(len(tokens)), (
+            "finish_stage before the table covered the prompt")
+        for i in range(self._n_shared[rid], len(table)):
+            self.caches = self._write(self.caches, staging,
+                                      jnp.int32(i), jnp.int32(table[i]))
+        self.allocator.register(rid, tuple(tokens))
+        self.tables_np[row, :] = 0
+        self.tables_np[row, :len(table)] = table
         self.pos[row] = len(tokens)
         self.last_token[row] = first_token
 

@@ -13,6 +13,7 @@ from typing import List, Optional, Tuple
 
 class RequestStatus(enum.Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"   # chunked prefill in flight, no token yet
     RUNNING = "running"
     PREEMPTED = "preempted"
     FINISHED = "finished"
@@ -40,6 +41,9 @@ class Request:
     preemptions: int = 0
     last_token_t: Optional[float] = None
     max_itl: Optional[float] = None   # worst inter-token gap seen
+    # when the first prefill chunk (or the monolithic prefill) ran — splits
+    # TTFT into time spent queued vs time spent chunk-prefilling
+    prefill_start_t: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -76,3 +80,18 @@ class Request:
         if self.first_token_t is None:
             return None
         return self.first_token_t - self.arrival_t
+
+    @property
+    def ttft_queue(self) -> Optional[float]:
+        """TTFT share spent waiting for admission (arrival → first chunk)."""
+        if self.prefill_start_t is None:
+            return None
+        return self.prefill_start_t - self.arrival_t
+
+    @property
+    def ttft_prefill(self) -> Optional[float]:
+        """TTFT share spent prefilling (first chunk → first token) — the
+        part a prefill-token budget trades against decode interference."""
+        if self.first_token_t is None or self.prefill_start_t is None:
+            return None
+        return self.first_token_t - self.prefill_start_t

@@ -24,11 +24,23 @@ class SchedulerConfig:
     policy: str = "fcfs"          # fcfs | sjf (shortest prompt first)
     max_prefill_per_step: int = 2  # prefill/decode mixing ratio cap
     model_turn_steps: int = 8     # tenant time-slice when weights don't fit
+    # Chunked prefill: cap on prompt tokens a single step may spend on
+    # chunk work (None = drain every pending chunk immediately).  With a
+    # budget, a long prompt's prefill is spread over several steps and the
+    # concurrent decode batch keeps emitting a token every step — the ARAS
+    # §V discipline of slicing oversized work into scheduler-sized pieces.
+    # A step always advances at least one chunk, so a budget smaller than
+    # the chunk size degrades to one-chunk-per-step rather than stalling.
+    prefill_token_budget: Optional[int] = None
 
     def __post_init__(self):
         if self.policy not in ("fcfs", "sjf"):
             raise ValueError(f"unknown queue policy {self.policy!r} "
                              "(expected 'fcfs' or 'sjf')")
+        if (self.prefill_token_budget is not None
+                and self.prefill_token_budget < 1):
+            raise ValueError("prefill_token_budget must be >= 1 (or None "
+                             "for unbudgeted prefill)")
 
 
 class StepScheduler:
@@ -42,6 +54,11 @@ class StepScheduler:
     @property
     def queue_depth(self) -> int:
         return len(self.queue)
+
+    def prefill_token_budget(self) -> float:
+        """Prompt tokens this step may spend on chunked-prefill work."""
+        b = self.cfg.prefill_token_budget
+        return float("inf") if b is None else float(b)
 
     # --------------------------------------------------------- admission
     def submit(self, req: Request) -> bool:

@@ -1,0 +1,432 @@
+"""Chunked prefill + prompt-length bucketing harness.
+
+Three pillars, per the acceptance bar:
+  * compile bounding — distinct prefill jit traces stay <= the bucket
+    ladder size over randomized prompt lengths (and grow ~linearly with
+    bucketing off), read off the `launch.steps.prefill_cache_info`
+    hit/miss counters;
+  * token equivalence — chunked prefill is token-for-token identical to
+    the monolithic path for slot and paged layouts, across GQA bf16/int8,
+    MLA+MoE, and the hymba SWA∥mamba hybrid (ring conversion), including
+    prefix-shared/COW pages and a mid-prefill pool-exhaustion
+    preempt/resume;
+  * scheduling — with a prefill-token budget, the decode batch never
+    shrinks below the no-prefill baseline while a long prompt is
+    chunk-prefilling, and the worst inter-token gap p95 strictly drops
+    versus monolithic prefill on the two-tenant Poisson workload (virtual
+    clock + per-token step cost model).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.steps import (cached_prefill_step, cached_serve_step,
+                                prefill_cache_info)
+from repro.nn.model import init_params
+from repro.serving import (EngineModel, SchedulerConfig, ServingEngine,
+                           VirtualClock, bucket_for, bucket_ladder,
+                           drive_simulated)
+from repro.serving.request import RequestStatus
+
+CFG = get_config("gemma-7b", smoke=True)
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+MAX_SEQ = 48
+
+
+def one_tenant_engine(cfg=CFG, params=PARAMS, *, max_seq=MAX_SEQ, chunk=0,
+                      budget=None, growth=2.0, kv_layout="slot", page_size=4,
+                      n_pages=0, kv_slots=3, clock=None,
+                      max_prefill_per_step=2):
+    kw = dict(kv_slots=kv_slots, max_seq=max_seq, kv_layout=kv_layout,
+              page_size=page_size, n_pages=n_pages)
+    extra = {} if clock is None else {"clock": clock}
+    return ServingEngine(
+        [EngineModel("a", params, cfg, **kw)],
+        sched=SchedulerConfig(max_prefill_per_step=max_prefill_per_step,
+                              prefill_token_budget=budget),
+        prefill_chunk=chunk, bucket_growth=growth, **extra)
+
+
+def sequential_tokens(prompt, n_new, cfg=CFG, params=PARAMS,
+                      cache_len=MAX_SEQ):
+    """Oracle: batch-1 monolithic prefill + scalar-position decode loop."""
+    logits, caches = cached_prefill_step(cfg, cache_len)(
+        params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]})
+    decode = cached_serve_step(cfg)
+    toks = [int(jnp.argmax(logits[0, :cfg.vocab]))]
+    for i in range(n_new - 1):
+        logits, caches = decode(params, jnp.asarray([toks[-1]], jnp.int32),
+                                caches, jnp.int32(len(prompt) + i))
+        toks.append(int(jnp.argmax(logits[0, :cfg.vocab])))
+    return toks
+
+
+def run_workload(eng, n=6, seed=0, gen=5, lo=3, hi=20):
+    rng = np.random.default_rng(seed)
+    reqs = [eng.submit("a", rng.integers(1, CFG.vocab,
+                                         int(rng.integers(lo, hi))).tolist(),
+                       max_new_tokens=gen) for _ in range(n)]
+    s = eng.run()
+    assert s["requests_finished"] == n
+    return reqs, s
+
+
+# ------------------------------------------------------- bucket ladder
+def _ladder_invariants(lo, hi, growth):
+    ladder = bucket_ladder(lo, hi, growth)
+    assert ladder[-1] == hi
+    assert all(b > a for a, b in zip(ladder, ladder[1:])), "not monotone"
+    for n in range(1, hi + 1):
+        b = bucket_for(n, ladder)
+        assert b >= n, "bucket below length"
+        assert b <= max(growth * n, lo), (
+            f"waste {b}/{n} exceeds growth {growth}")
+    # bucket_for is non-decreasing in n
+    buckets = [bucket_for(n, ladder) for n in range(1, hi + 1)]
+    assert buckets == sorted(buckets)
+
+
+def test_bucket_ladder_property():
+    """Hypothesis sweep: every (lo, hi, growth) ladder covers all lengths,
+    is monotone, and wastes at most a growth factor of padding."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(lo=st.integers(1, 32), span=st.integers(0, 480),
+           growth=st.floats(1.1, 4.0, allow_nan=False))
+    def prop(lo, span, growth):
+        _ladder_invariants(lo, lo + span, growth)
+
+    prop()
+
+
+def test_bucket_ladder_manual_trials():
+    """Deterministic fallback for environments without hypothesis: the same
+    invariants over a seeded random parameter sweep."""
+    rng = np.random.default_rng(11)
+    for _ in range(40):
+        lo = int(rng.integers(1, 33))
+        hi = lo + int(rng.integers(0, 200))
+        growth = float(rng.uniform(1.1, 4.0))
+        _ladder_invariants(lo, hi, growth)
+    # degenerate ladders are rejected loudly
+    with pytest.raises(ValueError):
+        bucket_ladder(8, 64, 1.0)
+    with pytest.raises(ValueError):
+        bucket_ladder(0, 64, 2.0)
+
+
+# ---------------------------------------------------- compile bounding
+def test_trace_count_bounded_by_bucket_ladder(record_property):
+    """~50 randomized prompt lengths: with bucketing OFF distinct chunk
+    traces grow ~linearly with distinct tail lengths; with bucketing ON
+    they stay <= the ladder size.  (Order matters: the step cache is
+    process-wide, so the off arm runs first and the on arm's delta can
+    only be smaller than a cold ladder.)"""
+    chunk = 32
+    rng = np.random.default_rng(5)
+    lens = [int(x) for x in rng.integers(1, MAX_SEQ - 8, 50)]
+    distinct_tails = len({n % chunk or chunk for n in lens})
+
+    def run_arm(growth):
+        before = prefill_cache_info()["chunk_misses"]
+        eng = one_tenant_engine(chunk=chunk, growth=growth, kv_slots=4)
+        for n in lens:
+            eng.submit("a", rng.integers(1, CFG.vocab, n).tolist(),
+                       max_new_tokens=2)
+        s = eng.run()
+        assert s["requests_finished"] == len(lens)
+        return prefill_cache_info()["chunk_misses"] - before
+
+    off_traces = run_arm(0.0)           # bucketing off: pad to exact tail
+    on_traces = run_arm(2.0)
+    ladder = bucket_ladder(8, chunk, 2.0)
+    assert on_traces <= len(ladder), (on_traces, ladder)
+    # off: one trace per distinct tail length (~linear growth)
+    assert off_traces >= 0.8 * distinct_tails, (off_traces, distinct_tails)
+    assert off_traces > 3 * on_traces
+    info = prefill_cache_info()
+    for k, v in info.items():
+        record_property(f"prefill_cache_{k}", v)
+    record_property("traces_bucketing_on", on_traces)
+    record_property("traces_bucketing_off", off_traces)
+
+
+def test_engine_summary_surfaces_trace_counters():
+    eng = one_tenant_engine(chunk=8)
+    eng.submit("a", [3, 1, 4, 1, 5, 9, 2, 6], max_new_tokens=2)
+    s = eng.run()
+    assert s["prefill_chunks"] >= 1
+    assert s["prefill_tokens"] == 8.0
+    assert s["prefill_cache_chunk_traces"] >= 1
+    assert s["prefill_cache_misses"] <= s["prefill_cache_hits"] + \
+        s["prefill_cache_misses"]
+
+
+# -------------------------------------------------- token equivalence
+@pytest.mark.parametrize("chunk,budget", [(4, None), (8, 4), (16, 3)])
+def test_slot_chunked_matches_monolithic_and_oracle(chunk, budget):
+    mono, _ = run_workload(one_tenant_engine())
+    chunked, s = run_workload(one_tenant_engine(chunk=chunk, budget=budget))
+    for m, c in zip(mono, chunked):
+        assert c.generated == m.generated, (chunk, budget, c.rid)
+        assert c.generated == sequential_tokens(list(c.prompt),
+                                                c.max_new_tokens)
+    assert s["prefill_chunks"] >= len(chunked)
+
+
+@pytest.mark.parametrize("chunk,budget", [(4, None), (8, 4)])
+def test_paged_chunked_matches_monolithic_and_oracle(chunk, budget):
+    kw = dict(kv_layout="paged", page_size=4, n_pages=24)
+    mono, _ = run_workload(one_tenant_engine(**kw), seed=1)
+    chunked, _ = run_workload(one_tenant_engine(chunk=chunk, budget=budget,
+                                                **kw), seed=1)
+    for m, c in zip(mono, chunked):
+        assert c.generated == m.generated, (chunk, budget, c.rid)
+        assert c.generated == sequential_tokens(
+            list(c.prompt), c.max_new_tokens, cache_len=24 * 4)
+
+
+def test_hymba_hybrid_chunked_matches_monolithic():
+    """The SWA∥mamba hybrid: chunk carry through the recurrent state and
+    the full-length→ring conversion at install must reproduce the
+    monolithic prefill token-for-token (prefill length crosses the
+    sliding window)."""
+    cfg = get_config("hymba-1.5b", smoke=True)   # window 16
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def arm(chunk, budget=None):
+        eng = one_tenant_engine(cfg, params, max_seq=40, chunk=chunk,
+                                budget=budget)
+        rng = np.random.default_rng(2)
+        reqs = [eng.submit("a", rng.integers(1, cfg.vocab,
+                                             int(n)).tolist(),
+                           max_new_tokens=6)
+                for n in (24, 7, 30, 18)]       # 24, 30 cross the window
+        eng.run()
+        return [list(r.generated) for r in reqs]
+
+    mono = arm(0)
+    assert arm(8) == mono
+    assert arm(16, budget=8) == mono
+
+
+def test_int8_kv_chunked_matches_monolithic():
+    """int8 tenants stage raw bf16 K/V and quantize once at install —
+    chunked must reproduce the monolithic attend-raw-then-quantize path."""
+    cfg = dataclasses.replace(CFG, kv_cache_dtype="int8")
+    mono, _ = run_workload(one_tenant_engine(cfg, PARAMS), seed=3, n=4)
+    chunked, _ = run_workload(one_tenant_engine(cfg, PARAMS, chunk=6),
+                              seed=3, n=4)
+    for m, c in zip(mono, chunked):
+        assert c.generated == m.generated, c.rid
+
+
+def test_mla_moe_chunked_matches_monolithic():
+    """MLA latent caches (chunk branch materializes K/V like the monolithic
+    prefill, not the absorbed decode path) + MoE batch routing."""
+    cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mono, _ = run_workload(one_tenant_engine(cfg, params), seed=4, n=4)
+    chunked, _ = run_workload(one_tenant_engine(cfg, params, chunk=8,
+                                                budget=8), seed=4, n=4)
+    for m, c in zip(mono, chunked):
+        assert c.generated == m.generated, c.rid
+
+
+def test_paged_chunked_prefix_sharing_and_cow_exact():
+    """An identical prompt arriving mid-decode shares the first request's
+    pages at chunk granularity (reservation opens with the shared prefix,
+    non-shared blocks grow per chunk) and COWs on divergence — both
+    decodes oracle-exact, pool drained on finish."""
+    kw = dict(kv_layout="paged", page_size=4, n_pages=16,
+              max_prefill_per_step=1)
+    prompt = [7, 3, 9, 2, 5, 8, 1, 4, 6, 2]      # 2 full pages + partial
+    eng = one_tenant_engine(chunk=4, **kw)
+    r1 = eng.submit("a", prompt, max_new_tokens=8)
+    eng.step()
+    eng.step()
+    r2 = eng.submit("a", prompt, max_new_tokens=8)
+    eng.run()
+    alloc = eng.arenas["a"].allocator
+    assert alloc.shared_hits >= 3
+    assert alloc.cow_copies >= 1
+    ref = sequential_tokens(prompt, 8, cache_len=16 * 4)
+    assert r1.generated == ref
+    assert r2.generated == ref
+    assert alloc.n_free == alloc.n_pages and not alloc.tables
+
+
+def test_paged_mid_prefill_exhaustion_preempts_and_resumes():
+    """A chunk-prefilling request whose page reservation hits pool
+    exhaustion is preempted (pages freed, staging kept) and resumes at the
+    last completed chunk once the decoding neighbor drains — no prompt
+    token is ever re-prefilled, and tokens stay oracle-exact."""
+    eng = one_tenant_engine(chunk=4, budget=4, kv_layout="paged",
+                            page_size=4, n_pages=6, kv_slots=2,
+                            max_prefill_per_step=1)
+    rng = np.random.default_rng(6)
+    p1 = rng.integers(1, CFG.vocab, 4).tolist()
+    p2 = rng.integers(1, CFG.vocab, 16).tolist()
+    r1 = eng.submit("a", p1, max_new_tokens=17)  # grows to ceil(21/4)=6 pages
+    for _ in range(3):                           # r1 mid-decode, 2 pages held
+        eng.step()
+    r2 = eng.submit("a", p2, max_new_tokens=4)   # needs 4 blocks + 1 decode
+    saw_prefilling = False
+    steps = 0
+    while eng.has_work() and steps < 200:
+        saw_prefilling |= r2.status is RequestStatus.PREFILLING
+        eng.step()
+        steps += 1
+    s = eng.summary()
+    assert r1.status is RequestStatus.FINISHED
+    assert r2.status is RequestStatus.FINISHED
+    assert saw_prefilling
+    assert r2.preemptions >= 1, "no mid-prefill preemption was provoked"
+    assert r1.preemptions == 0
+    # resume reused the staging: every prompt token prefilled exactly once
+    assert s["prefill_tokens"] == len(p1) + len(p2)
+    assert r1.generated == sequential_tokens(p1, 17, cache_len=6 * 4)
+    assert r2.generated == sequential_tokens(p2, 4, cache_len=6 * 4)
+
+
+def test_slot_explicit_preempt_mid_prefill_resumes():
+    """engine.preempt on a PREFILLING request releases the slot but keeps
+    chunk progress; readmission resumes rather than restarting."""
+    eng = one_tenant_engine(chunk=4, budget=4, kv_slots=1,
+                            max_prefill_per_step=1)
+    prompt = list(range(1, 17))
+    req = eng.submit("a", prompt, max_new_tokens=3)
+    eng.step()                                    # one chunk done
+    assert req.status is RequestStatus.PREFILLING
+    done_before = eng._prefills[req.rid].done
+    assert done_before == 4
+    eng.preempt(req.rid)
+    assert req.status is RequestStatus.PREEMPTED
+    assert req.rid in eng._prefills               # staging survives
+    eng.run()
+    s = eng.summary()
+    assert req.status is RequestStatus.FINISHED
+    assert s["prefill_tokens"] == len(prompt)     # no chunk re-run
+    assert req.generated == sequential_tokens(prompt, 3)
+
+
+# ------------------------------------------------------- scheduling
+def test_decode_batch_never_shrinks_during_chunked_prefill():
+    """With a prefill-token budget, a long prompt's chunks interleave with
+    the decode batch: every step while it prefills still decodes one token
+    per running request (the no-prefill baseline)."""
+    eng = one_tenant_engine(chunk=8, budget=8, max_seq=96, kv_slots=3)
+    a = eng.submit("a", [5, 6, 7], max_new_tokens=40)
+    b = eng.submit("a", [9, 8, 7, 6], max_new_tokens=40)
+    eng.step()                     # both admitted and decoding
+    assert a.status is RequestStatus.RUNNING
+    long = eng.submit("a", list(np.arange(1, 65)), max_new_tokens=2)
+    prefill_steps = 0
+    while long.status in (RequestStatus.QUEUED, RequestStatus.PREFILLING):
+        running = sum(r.status is RequestStatus.RUNNING
+                      for r in (a, b))
+        eng.step()
+        rec = eng.metrics.steps[-1]
+        assert rec.n_decoded >= running, (
+            "decode batch shrank while the long prompt chunk-prefilled")
+        if rec.n_prefill_chunks:
+            prefill_steps += 1
+    assert prefill_steps >= 64 // 8, "budget did not spread the prefill"
+    eng.run()
+    for r in (a, b, long):
+        assert r.generated == sequential_tokens(list(r.prompt),
+                                                r.max_new_tokens,
+                                                cache_len=96)
+
+
+def _itl_arm(jobs, *, chunk, budget):
+    clock = VirtualClock()
+    cfg = CFG
+    eng = ServingEngine(
+        [EngineModel("a", PARAMS, cfg, kv_slots=3, max_seq=200),
+         EngineModel("b", init_params(jax.random.PRNGKey(1), cfg), cfg,
+                     kv_slots=3, max_seq=200)],
+        sched=SchedulerConfig(max_prefill_per_step=2,
+                              prefill_token_budget=budget),
+        clock=clock, prefill_chunk=chunk)
+    dt = 1e-3
+    s = drive_simulated(
+        eng, clock, jobs, dt=dt,
+        step_dt=lambda rec: dt * (1 + rec.prefill_tokens))
+    s["_generated"] = {r.rid: list(r.generated)
+                       for r in eng.requests.values()}
+    return s
+
+
+def test_chunked_prefill_strictly_improves_worst_itl():
+    """Two-tenant Poisson workload with one long prompt per tenant, virtual
+    clock charging each step for its prefilled tokens: the budgeted chunked
+    arm must strictly drop the worst inter-token-gap p95 versus monolithic
+    prefill — token-for-token identical."""
+    rng = np.random.default_rng(8)
+    t, jobs = 0.0, []
+    for i in range(10):
+        t += float(rng.exponential(2.0)) * 1e-3
+        plen = 180 if i in (4, 7) else int(rng.integers(3, 12))
+        jobs.append((t, "a" if i % 2 == 0 else "b",
+                     rng.integers(1, CFG.vocab, plen).tolist(),
+                     int(rng.integers(6, 12))))
+    mono = _itl_arm(jobs, chunk=0, budget=None)
+    chunked = _itl_arm(jobs, chunk=16, budget=16)
+    assert chunked["_generated"] == mono["_generated"]
+    assert chunked["itl_max_p95_s"] < mono["itl_max_p95_s"], (
+        chunked["itl_max_p95_s"], mono["itl_max_p95_s"])
+    # the TTFT split exists for the chunked arm: queue + prefill == ttft
+    assert chunked["ttft_queue_p95_s"] >= 0
+    assert chunked["ttft_prefill_p95_s"] > 0
+
+
+def test_ttft_split_survives_decode_preemption():
+    """Re-prefilling a preempted (already-decoding) request must not move
+    prefill_start_t past the first token: the TTFT split describes the
+    road to the FIRST token only, so ttft_prefill stays non-negative."""
+    eng = one_tenant_engine(chunk=4, kv_slots=1)
+    req = eng.submit("a", list(range(1, 9)), max_new_tokens=8)
+    eng.step()                                    # prefilled + first token
+    assert req.status is RequestStatus.RUNNING
+    eng.step()
+    eng.preempt(req.rid)
+    eng.run()
+    assert req.status is RequestStatus.FINISHED
+    assert req.preemptions == 1
+    assert req.prefill_start_t <= req.first_token_t
+    assert req.ttft_prefill >= 0
+    assert req.generated == sequential_tokens(list(req.prompt), 8)
+
+
+def test_ttft_splits_sum_to_ttft():
+    eng = one_tenant_engine(chunk=4, budget=4,
+                            clock=None)
+    req = eng.submit("a", list(range(1, 13)), max_new_tokens=2)
+    eng.run()
+    assert req.ttft_queue is not None and req.ttft_prefill is not None
+    assert req.ttft == pytest.approx(req.ttft_queue + req.ttft_prefill)
+
+
+# ------------------------------------------------- allocator staging
+def test_allocator_begin_grow_atomic():
+    from repro.serving import PageAllocator
+    a = PageAllocator(4, 2)
+    n_shared = a.begin_table(0, (1, 2, 3, 4, 5))    # 3 blocks, none shared
+    assert n_shared == 0 and a.tables[0] == []
+    assert a.grow_table(0, 2) and len(a.tables[0]) == 2
+    assert a.grow_table(0, 2)                       # idempotent
+    a.begin_table(1, (9, 9))
+    assert a.grow_table(1, 1)
+    # pool now 3/4 used; growing rid 0 to 5 blocks needs 3 more > 1 free
+    assert not a.grow_table(0, 5)
+    assert len(a.tables[0]) == 2, "failed grow must not partially allocate"
+    a.free_table(0)
+    a.free_table(1)
+    assert a.n_free == a.n_pages

@@ -30,13 +30,18 @@ def _run_engine(args) -> None:
     from repro.serving.variants import perturbed_variant
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.prefix_cache and args.kv_layout != "paged":
+        raise SystemExit("--prefix-cache needs --kv-layout paged "
+                         "(slot arenas have no pages to retain)")
     max_seq = args.prompt_len + args.gen + 8
     base = init_params(jax.random.PRNGKey(0), cfg)
     # tenant-b is a perturbed variant of tenant-a (the co-hosted fine-tune
     # regime where cross-tenant §V-C delta installs have real structure).
     variant = perturbed_variant(base)
     kv = dict(kv_slots=args.kv_slots, max_seq=max_seq,
-              kv_layout=args.kv_layout, page_size=args.page_size)
+              kv_layout=args.kv_layout, page_size=args.page_size,
+              prefix_cache=args.prefix_cache,
+              prefix_cache_pages=args.prefix_cache_pages)
     tenants = [
         EngineModel("tenant-a", base, cfg, **kv),
         EngineModel("tenant-b", variant, cfg, **kv),
@@ -57,7 +62,8 @@ def _run_engine(args) -> None:
         install_cost=InstallCostModel(
             bytes_per_tick=args.install_bytes_per_tick),
         prefill_chunk=args.prefill_chunk,
-        bucket_growth=args.bucket_growth)
+        bucket_growth=args.bucket_growth,
+        staging_growth=args.staging_growth)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -121,6 +127,21 @@ def main() -> None:
                         "bucket ladder tail chunks are padded to; bounds "
                         "distinct prefill jit traces at the ladder size "
                         "(<= 1 disables bucketing)")
+    p.add_argument("--staging-growth", type=float, default=2.0,
+                   help="engine: geometric growth of the staging-length "
+                        "ladder — each chunked prefill stages into the "
+                        "smallest rung covering its prompt instead of one "
+                        "max-capacity buffer (<= 1 restores the single "
+                        "max-capacity staging length)")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="engine: radix-tree prefix cache over KV pages "
+                        "(kv_layout=paged): finished requests donate their "
+                        "pages, warm requests skip prefill chunks covered "
+                        "by cached pages, LRU eviction frees pages on "
+                        "demand")
+    p.add_argument("--prefix-cache-pages", type=int, default=0,
+                   help="engine: cap on retained prefix-cache pages per "
+                        "tenant (0 = bounded only by on-demand eviction)")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -10,6 +10,7 @@ from repro.serving.harness import drive_simulated
 from repro.serving.kv_arena import KVArena
 from repro.serving.metrics import EngineMetrics, VirtualClock, format_summary
 from repro.serving.paging import PageAllocator, PagedKVArena
+from repro.serving.prefix_cache import RadixNode, RadixPrefixCache
 from repro.serving.request import Request, RequestStatus
 from repro.serving.residency import InstallPipeline, WeightResidencyManager
 from repro.serving.sampling import request_key, sample_token
@@ -18,7 +19,8 @@ from repro.streaming.plan import InstallCostModel
 
 __all__ = [
     "EngineModel", "ServingEngine", "KVArena", "PageAllocator",
-    "PagedKVArena", "EngineMetrics", "VirtualClock", "format_summary",
+    "PagedKVArena", "RadixNode", "RadixPrefixCache",
+    "EngineMetrics", "VirtualClock", "format_summary",
     "Request", "RequestStatus", "InstallPipeline", "InstallCostModel",
     "WeightResidencyManager", "SchedulerConfig", "StepScheduler",
     "drive_simulated", "request_key", "sample_token",

@@ -55,10 +55,15 @@ class PrefillProgress:
     got.  Survives mid-prefill preemption — pages/slots are released, but
     the staging (per-request memory, not pool) keeps every completed
     chunk's K/V, so readmission resumes at `done` instead of re-running
-    the prompt."""
+    the prompt.  A prefix-cache hit advances `done` without compute:
+    `skipped` counts tokens whose K/V came out of cached pages instead of
+    a chunk run (the staging carry-in is seeded from the pool up to the
+    hit boundary)."""
     tokens: Tuple[int, ...]          # full serving prompt (incl. generated)
     caches: Any                      # batch-1 staging cache pytree
-    done: int = 0                    # prompt tokens prefilled so far
+    done: int = 0                    # prompt tokens covered so far
+    skipped: int = 0                 # of those, sourced from cached pages
+    staging_len: int = 0             # this request's staging-ladder rung
     logits: Any = None               # final chunk's next-token logits
     start_t: Optional[float] = None  # first chunk launch (TTFT split)
 

@@ -24,6 +24,14 @@ on a fixed device budget:
     Chunked and monolithic prefill are token-for-token identical on both
     KV layouts (tests/test_chunked_prefill.py) — except xLSTM tenants,
     whose chunkwise-parallel mLSTM groups floats differently per chunking;
+  * paged tenants with `prefix_cache=True` keep a radix-tree prefix cache
+    (`serving/prefix_cache.py`): finished requests donate their
+    prompt+generated pages into the tree (LRU-evicted on demand) and a
+    later request over the shared prefix *skips* every prefill chunk the
+    cached pages cover — the staging carry-in is seeded from the pool at
+    the hit boundary, so warm prefill is token-for-token identical to
+    cold while recomputing none of the covered chunks (ARAS §V-C
+    write-avoidance applied to the KV plane);
   * a `WeightResidencyManager` decides which tenant's quantized layer codes
     occupy the device weight slots, delta-installing on tenant switches and
     reporting wire bytes saved by §V-C cross-tenant reuse;
@@ -46,6 +54,7 @@ scalar oracle); the reassociation is inherent to batched matmuls.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable, Dict, Optional, Sequence
 
@@ -86,11 +95,22 @@ class EngineModel:
     kv_layout: str = "slot"          # "slot" | "paged"
     page_size: int = 8
     n_pages: int = 0                 # 0 → kv_slots · ceil(max_seq/page_size)
+    # Radix-tree prefix cache (paged layout only): finished requests donate
+    # their prompt+generated pages into a retained, LRU-evicted tree, and
+    # later requests sharing the prefix skip whole prefill chunks over the
+    # resident pages.  prefix_cache_pages caps the retained pages
+    # (0 = bounded only by on-demand eviction).
+    prefix_cache: bool = False
+    prefix_cache_pages: int = 0
 
     def __post_init__(self):
         if self.kv_layout not in ("slot", "paged"):
             raise ValueError(f"unknown kv_layout {self.kv_layout!r} "
                              "(expected 'slot' or 'paged')")
+        if self.prefix_cache and self.kv_layout != "paged":
+            raise ValueError(
+                f"{self.name}: prefix_cache needs kv_layout='paged' "
+                "(slot arenas have no pages to retain)")
 
 
 class ServingEngine:
@@ -104,7 +124,8 @@ class ServingEngine:
                  install_cost: Optional[InstallCostModel] = None,
                  prefill_chunk: int = 0,
                  bucket_growth: float = 2.0,
-                 bucket_min: int = 8):
+                 bucket_min: int = 8,
+                 staging_growth: float = 2.0):
         if not models:
             raise ValueError("need at least one tenant model")
         names = [m.name for m in models]
@@ -121,7 +142,9 @@ class ServingEngine:
                 n_pages = m.n_pages or m.kv_slots * -(-m.max_seq
                                                       // m.page_size)
                 self.arenas[m.name] = PagedKVArena(
-                    m.cfg, m.kv_slots, n_pages, m.page_size)
+                    m.cfg, m.kv_slots, n_pages, m.page_size,
+                    prefix_cache=m.prefix_cache,
+                    prefix_cache_pages=m.prefix_cache_pages)
                 self._decode[m.name] = cached_paged_serve_step(m.cfg)
             else:
                 self.arenas[m.name] = KVArena(m.cfg, m.kv_slots, m.max_seq)
@@ -176,19 +199,38 @@ class ServingEngine:
             self._ladder = bucket_ladder(min(bucket_min, self._chunk),
                                          self._chunk, bucket_growth)
         self._prefills: Dict[int, PrefillProgress] = {}
-        self._staging_len: Dict[str, int] = {}
+        self._staging_ladders: Dict[str, list] = {}
         if self._chunk > 0:
             for m in models:
                 cap = (self.arenas[m.name].max_tokens
                        if m.kv_layout == "paged" else m.max_seq)
-                # One fixed staging length per tenant: rounded up to a
-                # chunk multiple so a bucket-padded tail always fits (the
-                # install slices back down).  A single length keeps the
-                # trace bound at O(ladder); the cost is that every
-                # in-flight prefill holds a max-capacity staging cache
-                # even for short prompts (a staging-length ladder would
-                # trade traces for memory — ROADMAP follow-up).
-                self._staging_len[m.name] = -(-cap // self._chunk) * self._chunk
+                # Staging-length ladder: each in-flight prefill stages into
+                # the smallest geometric rung covering its prompt instead
+                # of one max-capacity buffer per tenant, so short prompts
+                # no longer hold worst-case memory while they chunk.
+                # Rungs are multiples of the chunk size (bucket-padded
+                # tails always fit; chunk starts stay aligned) and, for
+                # paged tenants, of the page size too (the install's
+                # per-page dynamic slices stay in bounds).  Distinct jit
+                # traces grow ×rungs — staging_growth <= 1 collapses the
+                # ladder back to the single max-capacity length.
+                quantum = self._chunk
+                if m.kv_layout == "paged":
+                    quantum = math.lcm(self._chunk, m.page_size)
+                top = -(-cap // quantum) * quantum
+                if staging_growth > 1.0 and top > quantum:
+                    rungs = sorted({-(-r // quantum) * quantum for r in
+                                    bucket_ladder(quantum, top,
+                                                  staging_growth)})
+                else:
+                    rungs = [top]
+                self._staging_ladders[m.name] = rungs
+
+    def staging_len_for(self, name: str, n_tokens: int) -> int:
+        """The staging-ladder rung an `n_tokens`-token prefill stages into
+        (smallest rung covering it; rungs are chunk multiples, so the
+        bucket-padded tail chunk always fits)."""
+        return bucket_for(n_tokens, self._staging_ladders[name])
 
     # ------------------------------------------------------------ intake
     def _prefill_fn(self, name: str, prompt_len: int):
@@ -329,18 +371,36 @@ class ServingEngine:
         return n_admitted, n_tokens
 
     def _finish(self, req: Request) -> None:
-        self.arenas[req.model].evict(req.slot)
+        arena = self.arenas[req.model]
+        if isinstance(arena, PagedKVArena):
+            # with the prefix cache on, the finished request donates its
+            # prompt+generated pages into the radix tree instead of
+            # freeing them — the next request over the shared prefix
+            # skips the covered prefill chunks entirely
+            arena.evict(req.slot, donate=req.prompt + tuple(req.generated))
+        else:
+            arena.evict(req.slot)
         req.slot = None
         req.status = RequestStatus.FINISHED
         req.finish_t = self._clock()
         self.metrics.record_finish(req)
 
     # ------------------------------------------------- chunked prefill
-    def _admit_staged(self, allowed) -> None:
+    def _admit_staged(self, allowed) -> int:
         """Chunked-prefill admission: claim a slot/row and a staging cache,
         but run no model yet — chunks run under _pump_prefills' token
         budget.  A preempted mid-prefill request re-enters here with its
-        PrefillProgress intact and resumes at the last completed chunk."""
+        PrefillProgress intact and resumes at the last completed chunk.
+
+        Prefix-cache hit path: when the tenant's radix tree covers a
+        block-aligned prefix of the prompt, every chunk fully inside the
+        cover is skipped — the staging carry-in is seeded straight from
+        the cached pages up to the hit boundary and `done` jumps there, so
+        the skipped tokens are never recomputed and cost no prefill
+        budget.  The skip is floored to a chunk boundary (later chunks
+        keep their cold-path traces) and capped at prompt_len - 1 (the
+        final chunk must run: its logits are the first token).  Returns
+        the prompt tokens served from cache this step."""
         free = {name: (arena.n_free if name in allowed else 0)
                 for name, arena in self.arenas.items()}
         n_active = sum(len(a.active_slots()) for a in self.arenas.values())
@@ -351,6 +411,7 @@ class ServingEngine:
                 return arena.can_admit(req.serving_prompt())
             return True
 
+        hit_tokens = 0
         for req in self.scheduler.next_admits(free, n_active, can_admit):
             arena = self.arenas[req.model]
             prompt = req.serving_prompt()
@@ -369,13 +430,26 @@ class ServingEngine:
             st = self._prefills.get(req.rid)
             if st is None or st.tokens != prompt:
                 # fresh prefill (or a decode-preempted request whose prompt
-                # grew by its generated tokens): new staging from zeros
+                # grew by its generated tokens): new staging from zeros,
+                # sized to the smallest ladder rung covering the prompt
                 m = self.models[req.model]
-                self._prefills[req.rid] = PrefillProgress(
-                    tokens=prompt,
-                    caches=init_cache(m.cfg, 1,
-                                      self._staging_len[req.model],
-                                      staging=True))
+                slen = self.staging_len_for(req.model, len(prompt))
+                st = PrefillProgress(
+                    tokens=prompt, staging_len=slen,
+                    caches=init_cache(m.cfg, 1, slen, staging=True))
+                self._prefills[req.rid] = st
+            if isinstance(arena, PagedKVArena) and arena.skip_ok:
+                covered = arena.covered_tokens(req.rid, len(prompt))
+                skip = (min(covered, len(prompt) - 1)
+                        // self._chunk) * self._chunk
+                if skip > st.done:
+                    # covers a resumed prefill too: pages donated since the
+                    # preemption extend the hit past the completed chunks
+                    st.caches = arena.load_prefix(req.rid, st.caches, skip)
+                    hit_tokens += skip - st.done
+                    st.skipped += skip - st.done
+                    st.done = skip
+        return hit_tokens
 
     def _run_chunk(self, req: Request, st: PrefillProgress) -> int:
         """Advance one chunk; returns valid tokens processed, or -1 when a
@@ -406,7 +480,7 @@ class ServingEngine:
                 # split describes the road to the FIRST token only
                 req.prefill_start_t = st.start_t
         step_fn = cached_chunk_prefill_step(
-            m.cfg, padded, self._staging_len[req.model])
+            m.cfg, padded, st.staging_len)
         logits, st.caches = step_fn(m.params, jnp.asarray(buf), st.caches,
                                     jnp.int32(start), jnp.int32(size))
         st.done += size
@@ -423,11 +497,12 @@ class ServingEngine:
         arena = self.arenas[req.model]
         tok = self._pick_token(req, st.logits[0])
         n_tok = len(st.tokens)
-        staging_len = self._staging_len[req.model]
+        staging_len = st.staging_len
         if isinstance(arena, PagedKVArena):
             source = st.caches
             if m.cfg.kv_cache_dtype == "int8":
-                source = cached_stage_quantize(m.cfg, staging_len)(source)
+                source = cached_stage_quantize(m.cfg, staging_len)(
+                    source, jnp.int32(n_tok))
             arena.finish_stage(req.slot, source, tok, st.tokens)
         else:
             row = cached_stage_install(m.cfg, staging_len, m.max_seq)(
@@ -457,8 +532,9 @@ class ServingEngine:
         """One step of chunked-prefill work: admit queued requests into
         staging, then advance in-flight prefills (FIFO by rid) under the
         scheduler's prefill-token budget.  Returns (prefills completed,
-        prompt tokens processed, chunks run)."""
-        self._admit_staged(allowed)
+        prompt tokens computed, chunks run, cache-hit tokens skipped) —
+        hit tokens never touch the budget: a cache hit is free work."""
+        hit_tokens = self._admit_staged(allowed)
         budget = self.scheduler.prefill_token_budget()
         n_done = tokens = chunks = 0
         for rid in sorted(self._prefills):
@@ -476,7 +552,7 @@ class ServingEngine:
                     and self._prefills[rid].finished):
                 self._finish_prefill(req, self._prefills[rid])
                 n_done += 1
-        return n_done, tokens, chunks
+        return n_done, tokens, chunks, hit_tokens
 
     def _can_progress(self, name: str) -> bool:
         """A tenant belongs in the turn rotation only if scheduling it can
@@ -568,11 +644,11 @@ class ServingEngine:
             decodable, wire, work = self._pump_installs(run_models, demand)
 
         if self._chunk > 0:
-            n_prefills, prefill_tokens, n_chunks = (
+            n_prefills, prefill_tokens, n_chunks, hit_tokens = (
                 self._pump_prefills(set(decodable)))
         else:
             n_prefills, prefill_tokens = self._admit(set(decodable))
-            n_chunks = 0
+            n_chunks = hit_tokens = 0
 
         n_decoded = 0
         for name in decodable:
@@ -622,17 +698,19 @@ class ServingEngine:
 
         tokens_out = n_decoded + n_prefills
         stall = (bool(run_models) and len(decodable) < len(run_models)
-                 and tokens_out == 0 and prefill_tokens == 0)
+                 and tokens_out == 0 and prefill_tokens == 0
+                 and hit_tokens == 0)
         if stall:
             # the step produced nothing because the scheduled tenant sat
             # waiting on installs — don't charge it a decode-slice step
             self.scheduler.refund_turn_step()
 
-        kv_used = kv_total = 0
+        kv_used = kv_total = cached_pages = 0
         for arena in self.arenas.values():
             if isinstance(arena, PagedKVArena):
                 kv_used += arena.allocator.n_used
                 kv_total += arena.allocator.n_pages
+                cached_pages += arena.allocator.tree.n_cached
         self.metrics.record_step(StepRecord(
             t=now,
             n_active=sum(len(a.active_slots()) for a in self.arenas.values()),
@@ -646,7 +724,9 @@ class ServingEngine:
             overlap_hidden_bytes=work if tokens_out > 0 else 0,
             install_stall=stall,
             prefill_tokens=prefill_tokens,
-            n_prefill_chunks=n_chunks))
+            n_prefill_chunks=n_chunks,
+            prefix_hit_tokens=hit_tokens,
+            prefix_cached_pages=cached_pages))
         self._step_no += 1
         self._wall_s += self._clock() - now
 
@@ -663,11 +743,13 @@ class ServingEngine:
                 break
             before = self.metrics.tokens_generated
             chunks_before = self.metrics.prefill_tokens
+            hits_before = self.metrics.prefix_hit_tokens
             ticks_before = self.pipeline.pumped_ticks if self.pipeline else 0
             self.step()
             progressed = (
                 self.metrics.tokens_generated != before
                 or self.metrics.prefill_tokens != chunks_before
+                or self.metrics.prefix_hit_tokens != hits_before
                 or (self.pipeline is not None
                     and self.pipeline.pumped_ticks != ticks_before))
             stall = 0 if progressed else stall + 1

@@ -57,6 +57,11 @@ class StepRecord:
     # virtual-clock cost models charge step time against prefill_tokens
     prefill_tokens: int = 0
     n_prefill_chunks: int = 0
+    # radix-tree prefix cache: prompt tokens served from cached pages this
+    # step (skipped chunks — they cost no compute and no prefill budget)
+    # and the retained-page gauge across all paged tenants
+    prefix_hit_tokens: int = 0
+    prefix_cached_pages: int = 0
 
 
 class EngineMetrics:
@@ -68,6 +73,7 @@ class EngineMetrics:
         self.preemptions = 0
         self.prefill_tokens = 0
         self.prefill_chunks = 0
+        self.prefix_hit_tokens = 0
 
     def record_step(self, rec: StepRecord) -> None:
         self.steps.append(rec)
@@ -75,6 +81,7 @@ class EngineMetrics:
         self.tokens_generated += rec.n_decoded + rec.n_prefills
         self.prefill_tokens += rec.prefill_tokens
         self.prefill_chunks += rec.n_prefill_chunks
+        self.prefix_hit_tokens += rec.prefix_hit_tokens
 
     def record_finish(self, req: Request) -> None:
         self.finished.append(req)
@@ -113,6 +120,13 @@ class EngineMetrics:
             "ttft_prefill_p95_s": _pct(ttft_p, 95),
             "prefill_tokens": float(self.prefill_tokens),
             "prefill_chunks": float(self.prefill_chunks),
+            # prefix cache: prompt tokens served from retained pages
+            # instead of chunk compute; hit rate over all prompt tokens
+            # the engine covered (computed + skipped)
+            "prefix_hit_tokens": float(self.prefix_hit_tokens),
+            "prefix_hit_rate": (
+                self.prefix_hit_tokens
+                / max(self.prefix_hit_tokens + self.prefill_tokens, 1)),
             # worst inter-token gap per request: the tenant-boundary stall a
             # mean latency hides (install stalls land exactly here)
             "itl_max_p50_s": _pct(itl, 50),
@@ -145,6 +159,11 @@ class EngineMetrics:
             out["kv_page_occupancy_mean"] = (
                 float(np.mean(occ)) if occ else 0.0)
             out["kv_page_occupancy_max"] = float(max(occ)) if occ else 0.0
+            cached = [s.prefix_cached_pages for s in self.steps]
+            out["prefix_cached_pages_mean"] = (
+                float(np.mean(cached)) if cached else 0.0)
+            out["prefix_cached_pages_max"] = (
+                float(max(cached)) if cached else 0.0)
         return out
 
 
@@ -180,6 +199,13 @@ def format_summary(s: Dict[str, float]) -> str:
             f"{s['install_raw_bytes']/1e6:.2f} MB raw "
             f"(saved {s['install_savings']:.1%}, "
             f"skip {s['install_mean_skip']:.1%})")
+    if s.get("prefix_hit_tokens", 0) or s.get("kv_prefix_cached_pages", 0):
+        lines.append(
+            f"prefix cache: {int(s['prefix_hit_tokens'])} prompt tokens "
+            f"served from cache ({s['prefix_hit_rate']:.1%} hit rate), "
+            f"{int(s.get('kv_prefix_cached_pages', 0))} pages resident "
+            f"(max {int(s.get('prefix_cached_pages_max', 0))}), "
+            f"{int(s.get('kv_prefix_evictions', 0))} LRU evictions")
     if s.get("prefill_chunks", 0):
         lines.append(
             f"chunked prefill: {int(s['prefill_tokens'])} prompt tokens in "

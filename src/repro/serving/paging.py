@@ -30,12 +30,20 @@ only add entries at *higher* positions, which any sharer masks out
 content grows — but a *write* into a page with refcount > 1 must COW first,
 because two requests appending different tokens at the same page offset
 would otherwise corrupt each other.
+
+The prefix index is a `RadixPrefixCache` (serving/prefix_cache.py): a
+radix tree over token-block edges.  With `retain=True` the tree also
+*keeps* pages after their last live holder exits (finished requests donate
+their prompt+generated pages instead of freeing them), holding one
+refcount per retained page and LRU-evicting on demand when an allocation
+would otherwise fail — write-avoidance extended from the weight plane
+(§V-C delta installs) to the KV plane.
 """
 from __future__ import annotations
 
 import functools
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +51,7 @@ import numpy as np
 
 from repro.nn.config import ModelConfig
 from repro.nn.transformer import layer_kind, stack_plan
+from repro.serving.prefix_cache import RadixPrefixCache
 
 
 class PageAllocator:
@@ -51,17 +60,18 @@ class PageAllocator:
     Physical page ids run 1..n_pages; id 0 is the arena's reserved scratch
     page and is never handed out."""
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int, *,
+                 retain: bool = False, max_cached: Optional[int] = None):
         if n_pages < 1 or page_size < 1:
             raise ValueError("need n_pages >= 1 and page_size >= 1")
         self.n_pages = n_pages
         self.page_size = page_size
+        self.retain = retain
         self._free: deque = deque(range(1, n_pages + 1))
         self.refcount = np.zeros(n_pages + 1, np.int32)
         self.tables: Dict[int, List[int]] = {}      # rid -> physical pages
-        # prefix index: token-prefix tuple -> page holding its last block
-        self._index: Dict[Tuple[int, ...], int] = {}
-        self._page_key: Dict[int, Tuple[int, ...]] = {}
+        # prefix index + retention layer: radix tree over token-block edges
+        self.tree = RadixPrefixCache(page_size, max_cached=max_cached)
         # lifetime stats
         self.pages_allocated = 0
         self.shared_hits = 0
@@ -91,52 +101,55 @@ class PageAllocator:
 
     def free_page(self, page: int) -> None:
         """Drop one reference; the page returns to the free list (contents
-        left stale on device) only when the last holder lets go."""
+        left stale on device) only when the last holder lets go.  A dying
+        live page takes its tree node with it, cascading through any
+        retained subtree below (whose refs come back through this very
+        method — by_page is cleared first, so re-entry is a no-op)."""
         if self.refcount[page] <= 0:
             raise ValueError(f"double free of page {page}")
         self.refcount[page] -= 1
         if self.refcount[page] == 0:
-            key = self._page_key.pop(page, None)
-            if key is not None:
-                self._index.pop(key, None)
+            self.tree.drop_page(page, self.free_page)
             self._free.append(page)
 
-    # ------------------------------------------------------ prefix sharing
-    def match_prefix(self, tokens: Tuple[int, ...]) -> List[int]:
-        """Longest chain of resident pages whose registered token prefixes
-        match `tokens` block by block.  Full blocks match on the full
-        block-boundary prefix; the final partial block matches only a page
-        registered under exactly `tokens` (a page holding *more* than the
-        lookup key would require mid-page writes during prefill, where
-        sharing buys nothing over writing a fresh page).
+    def _sole(self, page: int) -> bool:
+        """Nobody but the tree holds this page — the eviction predicate."""
+        return self.refcount[page] == 1
 
-        Keys are exact full-prefix tuples, so one call costs O(blocks·len)
-        tuple hashing — quadratic in prompt length.  Fine at serving-prompt
-        scale here; long-context sharing wants parent-page hash chains with
-        cascade invalidation (vLLM-style) before this goes near 10k-token
-        prompts."""
-        shared: List[int] = []
-        n = len(tokens)
-        for i in range(self.blocks_for(n)):
-            end = min((i + 1) * self.page_size, n)
-            page = self._index.get(tuple(tokens[:end]))
-            if page is None:
-                break
-            shared.append(page)
-        return shared
+    # ------------------------------------------------------ prefix sharing
+    def match_prefix(self, tokens: Tuple[int, ...],
+                     touch: bool = True) -> List[int]:
+        """Longest chain of resident pages whose token prefixes match
+        `tokens` block by block — a radix-tree walk, one dict probe per
+        block (O(blocks) incremental hashing, not the old O(blocks·len)
+        full-prefix tuples).  Full blocks match on block-boundary edges;
+        the final partial block matches only an exact-tuple edge (a page
+        holding *more* than the lookup key would require mid-page writes
+        during prefill, where sharing buys nothing over writing a fresh
+        page).  `touch=False` keeps pure capacity probes out of the LRU
+        order."""
+        return self.tree.match(tuple(tokens), touch=touch)
 
     def register(self, rid: int, tokens: Tuple[int, ...]) -> None:
         """Publish a freshly installed table's pages under their token
         prefixes so later requests can share them.  First writer wins; a
         page is only ever indexed under one key."""
-        table = self.tables[rid]
-        n = len(tokens)
-        for i, page in enumerate(table):
-            end = min((i + 1) * self.page_size, n)
-            key = tuple(tokens[:end])
-            if key not in self._index and page not in self._page_key:
-                self._index[key] = page
-                self._page_key[page] = key
+        self.tree.register(tuple(tokens), self.tables[rid])
+
+    # ----------------------------------------------------------- eviction
+    def evictable_pages(self, exclude: FrozenSet[int] = frozenset()) -> int:
+        """Pages on-demand eviction could free right now (exact, so
+        admission promises only what `ensure_free` can deliver)."""
+        return self.tree.evictable(self._sole, frozenset(exclude))
+
+    def ensure_free(self, need: int) -> bool:
+        """LRU-evict retained pages until `need` pages are free.  False
+        when the cache cannot cover the shortfall (callers pre-check with
+        `evictable_pages` to fail without side effects)."""
+        while len(self._free) < need:
+            if not self.tree.evict_lru(self._sole, self.free_page):
+                return False
+        return True
 
     # ------------------------------------------------------ request level
     def alloc_table(self, rid: int, tokens: Tuple[int, ...]
@@ -149,13 +162,18 @@ class PageAllocator:
             raise ValueError(f"rid {rid} already holds a table")
         n_blocks = self.blocks_for(len(tokens))
         shared = self.match_prefix(tokens)
-        if n_blocks - len(shared) > self.n_free:
-            return None
-        for page in shared:
+        for page in shared:          # pin first: pinned pages never evict
             self.refcount[page] += 1
             self.shared_hits += 1
+        need = n_blocks - len(shared)
+        if need > self.n_free + self.evictable_pages():
+            for page in shared:      # unpin — no side effects on failure
+                self.free_page(page)
+            self.shared_hits -= len(shared)
+            return None
+        self.ensure_free(need)
         table = list(shared)
-        for _ in range(n_blocks - len(shared)):
+        for _ in range(need):
             table.append(self._alloc_page())
         self.tables[rid] = table
         return table, len(shared)
@@ -188,16 +206,18 @@ class PageAllocator:
         need = n_blocks - len(self.tables[rid])
         if need <= 0:
             return True
-        if need > self.n_free:
+        if need > self.n_free + self.evictable_pages():
             return False
+        self.ensure_free(need)
         for _ in range(need):
             self.tables[rid].append(self._alloc_page())
         return True
 
     def extend(self, rid: int) -> Optional[int]:
         """Append one fresh page to rid's table (decode crossed a page
-        boundary).  None when the pool is exhausted — the caller preempts."""
-        if not self._free:
+        boundary), LRU-evicting a retained page if the free list is empty.
+        None when the pool is exhausted — the caller preempts."""
+        if not self.ensure_free(1):
             return None
         page = self._alloc_page()
         self.tables[rid].append(page)
@@ -206,11 +226,12 @@ class PageAllocator:
     def cow(self, rid: int, block: int) -> Optional[Tuple[int, int]]:
         """Make rid's `block` exclusively owned before a write.  Returns
         (src, dst) when a device page copy is required, (page, page) when
-        the page was already exclusive, None when the pool is exhausted."""
+        the page was already exclusive, None when the pool is exhausted
+        (after LRU-evicting any retained pages it could)."""
         old = self.tables[rid][block]
         if self.refcount[old] <= 1:
             return old, old
-        if not self._free:
+        if not self.ensure_free(1):
             return None
         new = self._alloc_page()
         self.free_page(old)          # our ref only; other holders keep it
@@ -218,9 +239,20 @@ class PageAllocator:
         self.cow_copies += 1
         return old, new
 
-    def free_table(self, rid: int) -> None:
-        for page in self.tables.pop(rid):
-            self.free_page(page)
+    def free_table(self, rid: int,
+                   donate_tokens: Optional[Tuple[int, ...]] = None) -> None:
+        """Release rid's table.  With retention on and `donate_tokens` (the
+        token sequence the table holds valid K/V for — prompt + generated
+        minus the just-emitted last token), the pages enter the radix tree
+        retained instead of returning to the free list: the next request
+        sharing the prefix finds them resident."""
+        table = self.tables.pop(rid)
+        if (self.retain and donate_tokens
+                and len(table) == self.blocks_for(len(donate_tokens))):
+            self.tree.donate(tuple(donate_tokens), table, self.free_page)
+        else:
+            for page in table:
+                self.free_page(page)
 
 
 # ---------------------------------------------------------------- device
@@ -289,6 +321,34 @@ def _cached_page_write(cfg: ModelConfig, page_size: int):
 
 
 @functools.lru_cache(maxsize=None)
+def _cached_page_read(cfg: ModelConfig, page_size: int):
+    """Jitted pool→staging gather, the inverse of `_cached_page_write`:
+    copy physical page `page` of the pool into logical block `block` of a
+    batch-1 staging cache.  The chunk-skip warm path uses it to seed the
+    staging carry-in from cached prefix pages, so the first computed chunk
+    attends exactly the K/V the donor computed (bf16 pools round-trip
+    bit-exact; int8 pools would dequantize, so the engine never skips
+    there).  Staging is donated — the caller immediately rebinds it."""
+    plan = stack_plan(cfg)
+
+    def read(one, pool, block, page):
+        out = []
+        for seg_one, seg_pool, (_, _, scanned) in zip(one, pool, plan):
+            def upd(o, a, scanned=scanned):
+                if scanned:  # a (L, P, ps, ...), o (L, 1, Lbuf, ...)
+                    chunk = jax.lax.dynamic_slice_in_dim(a, page, 1, axis=1)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        o, chunk.astype(o.dtype), block * page_size, axis=2)
+                chunk = jax.lax.dynamic_slice_in_dim(a, page, 1, axis=0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    o, chunk.astype(o.dtype), block * page_size, axis=1)
+            out.append(jax.tree.map(upd, seg_one, seg_pool))
+        return out
+
+    return jax.jit(read, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
 def _cached_page_copy(cfg: ModelConfig):
     """Jitted COW page copy: pool page `src` -> pool page `dst`."""
     plan = stack_plan(cfg)
@@ -318,7 +378,8 @@ class PagedKVArena:
     layout = "paged"
 
     def __init__(self, cfg: ModelConfig, n_rows: int, n_pages: int,
-                 page_size: int):
+                 page_size: int, *, prefix_cache: bool = False,
+                 prefix_cache_pages: int = 0):
         for start, _, _ in stack_plan(cfg):
             if layer_kind(cfg, start) != "attn":
                 raise ValueError(
@@ -328,7 +389,15 @@ class PagedKVArena:
         self.cfg = cfg
         self.n_rows = n_rows
         self.page_size = page_size
-        self.allocator = PageAllocator(n_pages, page_size)
+        self.prefix_cache = bool(prefix_cache)
+        # chunk-skip needs the pool→staging reload to be bit-exact; int8
+        # pools store quantized K/V the staging attends raw, so those
+        # tenants retain/share pages but never skip prefill compute
+        self.skip_ok = self.prefix_cache and cfg.kv_cache_dtype != "int8"
+        self.allocator = PageAllocator(
+            n_pages, page_size, retain=self.prefix_cache,
+            max_cached=(prefix_cache_pages or None) if prefix_cache
+            else None)
         self.caches = init_page_pool(cfg, n_pages + 1, page_size)
         self.owner: List[Optional[int]] = [None] * n_rows
         self.pos = np.zeros(n_rows, np.int32)
@@ -338,6 +407,7 @@ class PagedKVArena:
         self._n_shared: Dict[int, int] = {}   # rid -> shared prefix pages
         self._free_rows: deque = deque(range(n_rows))
         self._write = _cached_page_write(cfg, page_size)
+        self._read = _cached_page_read(cfg, page_size)
         self._copy = _cached_page_copy(cfg)
         self.evictions = 0
 
@@ -356,15 +426,21 @@ class PagedKVArena:
         return self.allocator.blocks_for(n_tokens)
 
     def can_admit(self, tokens: Tuple[int, ...]) -> bool:
-        """Enough free pages for the non-shared tail, and a free row."""
+        """Enough free pages for the non-shared tail — counting retained
+        pages LRU eviction could free on demand — and a free row."""
         if not self._free_rows:
             return False
+        a = self.allocator
         need = self.blocks_for(len(tokens))
-        if need <= self.allocator.n_free:
-            return True     # fits even with zero sharing: skip the
-            # O(blocks·len) prefix match on the hot scheduling path
-        need -= len(self.allocator.match_prefix(tuple(tokens)))
-        return need <= self.allocator.n_free
+        if need <= a.n_free:
+            return True     # fits even with zero sharing: skip the prefix
+            # match + evictability walk on the hot scheduling path
+        shared = a.match_prefix(tuple(tokens), touch=False)
+        need -= len(shared)
+        # matched pages are about to be pinned, not consumed — exclude
+        # them from the evictable count so the promise stays exact (an
+        # optimistic count would requeue-livelock the engine)
+        return need <= a.n_free + a.evictable_pages(frozenset(shared))
 
     # ------------------------------------------------------------- rows
     def active_slots(self) -> List[int]:
@@ -389,13 +465,21 @@ class PagedKVArena:
         self.tables_np[row, :len(table)] = table
         return row
 
-    def evict(self, row: int) -> Optional[int]:
+    def evict(self, row: int,
+              donate: Optional[Tuple[int, ...]] = None) -> Optional[int]:
         """Release a row (finish or preemption): refcounts drop, pages whose
-        last holder left return to the free list with stale contents."""
+        last holder left return to the free list with stale contents.
+        `donate` (a finished request's prompt + generated tokens) instead
+        retains the pages in the prefix cache: the table holds valid K/V
+        for the first `pos` of them (the just-emitted last token was never
+        written), so that prefix is what enters the tree."""
         rid = self.owner[row]
         if rid is None:
             return None
-        self.allocator.free_table(rid)
+        tokens = None
+        if donate is not None and self.prefix_cache:
+            tokens = tuple(donate)[:int(self.pos[row])]
+        self.allocator.free_table(rid, donate_tokens=tokens)
         self._n_shared.pop(rid, None)
         self.owner[row] = None
         self.tables_np[row, :] = 0
@@ -441,6 +525,29 @@ class PagedKVArena:
         """Reserve pages for the next prefill chunk; False = pool exhausted
         (the engine preempts the prefill, staging intact)."""
         return self.allocator.grow_table(rid, n_blocks)
+
+    # --------------------------------------------------- prefix-cache skip
+    def covered_tokens(self, rid: int, n_tokens: int) -> int:
+        """Prompt tokens of rid covered by its shared (cached or live)
+        prefix pages — the ceiling for chunk-skip.  An exact-tuple tail
+        match shares a partial page, so the cover is capped at the prompt
+        itself."""
+        return min(self._n_shared.get(rid, 0) * self.page_size, n_tokens)
+
+    def load_prefix(self, rid: int, staging: Any, n_tokens: int) -> Any:
+        """Seed a staging cache with rid's shared prefix pages covering the
+        first `n_tokens` positions: every page overlapping [0, n_tokens)
+        is gathered whole (full pages by construction — the skip boundary
+        never reaches into a partial tail page's garbage).  Returns the
+        rebound (donated) staging."""
+        table = self.allocator.tables[rid]
+        n_blocks = -(-n_tokens // self.page_size)
+        assert n_blocks <= self._n_shared.get(rid, 0), (
+            "load_prefix beyond the shared prefix")
+        for i in range(n_blocks):
+            staging = self._read(staging, self.caches,
+                                 jnp.int32(i), jnp.int32(table[i]))
+        return staging
 
     def finish_stage(self, row: int, staging: Any, first_token: int,
                      tokens: Tuple[int, ...]) -> None:
@@ -506,4 +613,6 @@ class PagedKVArena:
             "kv_pages_allocated": float(a.pages_allocated),
             "kv_shared_page_hits": float(a.shared_hits),
             "kv_cow_copies": float(a.cow_copies),
+            "kv_prefix_cached_pages": float(a.tree.n_cached),
+            "kv_prefix_evictions": float(a.tree.evictions),
         }

@@ -31,6 +31,9 @@ class SchedulerConfig:
     # §V discipline of slicing oversized work into scheduler-sized pieces.
     # A step always advances at least one chunk, so a budget smaller than
     # the chunk size degrades to one-chunk-per-step rather than stalling.
+    # The budget is cache-aware: prompt tokens served from the radix-tree
+    # prefix cache (skipped chunks) cost no compute and are not charged —
+    # only chunks the model actually runs count against it.
     prefill_token_budget: Optional[int] = None
 
     def __post_init__(self):

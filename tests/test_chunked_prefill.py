@@ -40,7 +40,7 @@ MAX_SEQ = 48
 def one_tenant_engine(cfg=CFG, params=PARAMS, *, max_seq=MAX_SEQ, chunk=0,
                       budget=None, growth=2.0, kv_layout="slot", page_size=4,
                       n_pages=0, kv_slots=3, clock=None,
-                      max_prefill_per_step=2):
+                      max_prefill_per_step=2, staging_growth=2.0):
     kw = dict(kv_slots=kv_slots, max_seq=max_seq, kv_layout=kv_layout,
               page_size=page_size, n_pages=n_pages)
     extra = {} if clock is None else {"clock": clock}
@@ -48,7 +48,8 @@ def one_tenant_engine(cfg=CFG, params=PARAMS, *, max_seq=MAX_SEQ, chunk=0,
         [EngineModel("a", params, cfg, **kw)],
         sched=SchedulerConfig(max_prefill_per_step=max_prefill_per_step,
                               prefill_token_budget=budget),
-        prefill_chunk=chunk, bucket_growth=growth, **extra)
+        prefill_chunk=chunk, bucket_growth=growth,
+        staging_growth=staging_growth, **extra)
 
 
 def sequential_tokens(prompt, n_new, cfg=CFG, params=PARAMS,
@@ -135,7 +136,10 @@ def test_trace_count_bounded_by_bucket_ladder(record_property):
 
     def run_arm(growth):
         before = prefill_cache_info()["chunk_misses"]
-        eng = one_tenant_engine(chunk=chunk, growth=growth, kv_slots=4)
+        # staging_growth=0: one staging length, so the trace count isolates
+        # the tail-bucketing effect (the staging ladder has its own test)
+        eng = one_tenant_engine(chunk=chunk, growth=growth, kv_slots=4,
+                                staging_growth=0.0)
         for n in lens:
             eng.submit("a", rng.integers(1, CFG.vocab, n).tolist(),
                        max_new_tokens=2)
@@ -155,6 +159,68 @@ def test_trace_count_bounded_by_bucket_ladder(record_property):
         record_property(f"prefill_cache_{k}", v)
     record_property("traces_bucketing_on", on_traces)
     record_property("traces_bucketing_off", off_traces)
+
+
+# ---------------------------------------------------- staging ladder
+def test_staging_ladder_rungs_and_memory():
+    """The staging-length ladder (default on): each in-flight prefill
+    stages into the smallest rung covering its prompt, not one
+    max-capacity buffer.  Rungs are chunk multiples (slot) and
+    lcm(chunk, page) multiples (paged); staging_growth <= 1 restores the
+    single max-capacity length."""
+    eng = one_tenant_engine(chunk=8, max_seq=96)
+    rungs = eng._staging_ladders["a"]
+    assert rungs[-1] >= 96 and all(r % 8 == 0 for r in rungs)
+    assert rungs == sorted(set(rungs)) and len(rungs) > 1
+    for n in (1, 8, 9, 96):
+        rung = eng.staging_len_for("a", n)
+        assert rung >= n and rung % 8 == 0 and rung in rungs
+    assert eng.staging_len_for("a", 1) < eng.staging_len_for("a", 96)
+    # a short prompt's live staging cache really is rung-sized
+    eng.submit("a", [3, 1, 4], max_new_tokens=2)
+    eng._admit_staged({"a"})
+    st = eng._prefills[0]
+    assert st.staging_len == eng.staging_len_for("a", 3)
+    leaf = jax.tree.leaves(st.caches)[0]
+    assert st.staging_len in leaf.shape
+    eng.run()
+    # paged: rungs stay page-aligned even when chunk and page are coprime
+    paged = one_tenant_engine(chunk=6, kv_layout="paged", page_size=4,
+                              n_pages=24)
+    assert all(r % 12 == 0 for r in paged._staging_ladders["a"])
+    # flat ladder: exactly one max-capacity rung
+    flat = one_tenant_engine(chunk=8, max_seq=96, staging_growth=0.0)
+    assert flat._staging_ladders["a"] == [96]
+
+
+def test_staging_ladder_bounds_traces_at_ladder_x_rungs():
+    """Trace accounting with the ladder on: distinct chunk-prefill traces
+    stay <= |bucket ladder| x |staging rungs actually used|."""
+    chunk = 16
+    rng = np.random.default_rng(9)
+    lens = [int(x) for x in rng.integers(1, MAX_SEQ - 8, 30)]
+    before = prefill_cache_info()["chunk_misses"]
+    eng = one_tenant_engine(chunk=chunk, kv_slots=4)
+    for n in lens:
+        eng.submit("a", rng.integers(1, CFG.vocab, n).tolist(),
+                   max_new_tokens=2)
+    s = eng.run()
+    assert s["requests_finished"] == len(lens)
+    traces = prefill_cache_info()["chunk_misses"] - before
+    ladder = bucket_ladder(8, chunk, 2.0)
+    rungs_used = {eng.staging_len_for("a", n) for n in lens}
+    assert traces <= len(ladder) * len(rungs_used), (
+        traces, ladder, sorted(rungs_used))
+
+
+def test_staging_ladder_token_identical_to_flat():
+    """Rung-sized staging must not change a single token versus the
+    max-capacity staging (masked tail positions contribute exact zeros)."""
+    flat, _ = run_workload(one_tenant_engine(chunk=8, budget=8,
+                                             staging_growth=0.0), seed=12)
+    laddered, _ = run_workload(one_tenant_engine(chunk=8, budget=8), seed=12)
+    for f, g in zip(flat, laddered):
+        assert f.generated == g.generated, f.rid
 
 
 def test_engine_summary_surfaces_trace_counters():

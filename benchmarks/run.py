@@ -33,7 +33,7 @@ def main() -> None:
         from benchmarks import serving_bench, streaming_bench
 
         streaming_bench.main()
-        serving_bench.main()
+        serving_bench.main([])   # default parts; don't re-parse our argv
 
     print(f"\ntotal benchmark wall time: {time.perf_counter() - t0:.1f}s")
 

@@ -41,10 +41,28 @@ retains finished requests' pages in the radix tree and skips every chunk
 the cached prefix covers, so it must show strictly fewer computed prefill
 tokens and a strictly lower TTFT p95 — token-for-token identical output.
 
+Part 6 — per-step component breakdown through the structured tracer, on
+the part-3 overlap workload.  A wall-clock `Tracer` on a virtual-clock
+engine keeps the schedule deterministic while the component spans
+(schedule / install / prefill / decode / sample / bookkeep) measure real
+host seconds, printed as an overlap-on vs overlap-off table.  With
+`--trace-out` it also re-runs the overlap arm with engine AND tracer on
+one `VirtualClock` and writes the byte-identical Chrome-trace artifact.
+
+Every run writes the per-part headline numbers to `BENCH_serving.json`
+at the repo root (override with `--out`, disable with `--out ''`), so
+the perf trajectory persists commit over commit.  `--parts` selects a
+subset, e.g. the CI artifact job runs only the virtual-clock parts:
+
     PYTHONPATH=src python -m benchmarks.serving_bench
+    PYTHONPATH=src python -m benchmarks.serving_bench --parts 3,6 \
+        --trace-out trace.json
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -55,8 +73,10 @@ from benchmarks.streaming_bench import _checkpointify
 from repro.configs import get_config
 from repro.nn.model import init_params
 from repro.serving import (EngineModel, InstallCostModel, SchedulerConfig,
-                           ServingEngine, VirtualClock, WeightResidencyManager,
-                           drive_simulated, format_summary)
+                           ServingEngine, Tracer, VirtualClock,
+                           WeightResidencyManager, drive_simulated,
+                           format_summary)
+from repro.serving.tracing import TRACE_COMPONENTS
 from repro.serving.variants import perturbed_variant
 
 N_REQUESTS = 24
@@ -200,9 +220,18 @@ def _overlap_workload(cfg, seed: int = 2, n: int = 16):
     return jobs
 
 
+def _install_tick_bytes(cfg, params_a, params_b) -> int:
+    """Size one install tick at half the biggest layer's raw stream so a
+    cold tenant install spans several steps — the regime where hiding it
+    matters.  (Sizing needs the quantized store, not a whole engine.)"""
+    probe = WeightResidencyManager(
+        {"base": (params_a, cfg), "variant": (params_b, cfg)}, cfg.n_layers)
+    return max(max(lw.codes.size for lw in probe.store.layers) // 2, 1)
+
+
 def _run_overlap_arm(cfg, params_a, params_b, jobs, *, overlap: bool,
-                     bytes_per_tick: int):
-    clock = VirtualClock()
+                     bytes_per_tick: int, tracer=None, clock=None):
+    clock = clock or VirtualClock()
     eng = ServingEngine(
         [EngineModel("base", params_a, cfg, kv_slots=KV_SLOTS,
                      max_seq=MAX_SEQ),
@@ -211,7 +240,7 @@ def _run_overlap_arm(cfg, params_a, params_b, jobs, *, overlap: bool,
         weight_arena_slots=cfg.n_layers + 1,   # forces tenant swaps
         sched=SchedulerConfig(max_prefill_per_step=4,
                               model_turn_steps=OVERLAP_TURN_STEPS),
-        clock=clock,
+        clock=clock, tracer=tracer,
         install_ticks_per_step=1, overlap_installs=overlap,
         install_cost=InstallCostModel(bytes_per_tick=bytes_per_tick))
     summary = drive_simulated(eng, clock, jobs, dt=OVERLAP_STEP_DT)
@@ -227,13 +256,7 @@ def overlap_vs_sync() -> dict:
     params_a = _checkpointify(init_params(jax.random.PRNGKey(0), cfg))
     params_b = perturbed_variant(params_a)
     jobs = _overlap_workload(cfg)
-
-    # Size one tick at half the biggest layer's raw stream so a cold tenant
-    # install spans several steps — the regime where hiding it matters.
-    # (Sizing needs the quantized store, not a whole engine.)
-    probe = WeightResidencyManager(
-        {"base": (params_a, cfg), "variant": (params_b, cfg)}, cfg.n_layers)
-    bpt = max(max(lw.codes.size for lw in probe.store.layers) // 2, 1)
+    bpt = _install_tick_bytes(cfg, params_a, params_b)
 
     out = {}
     for overlap in (False, True):
@@ -446,7 +469,156 @@ def prefix_cache_bench() -> dict:
     return out
 
 
-def main() -> dict:
+# ------------------------------------- component breakdown (part 6)
+def component_breakdown(trace_out: str = "") -> dict:
+    """Per-step component breakdown via the structured tracer, overlap on
+    vs off on the part-3 workload.  Engine on a VirtualClock (identical,
+    deterministic schedules across arms), tracer on the wall clock (real
+    host seconds per component)."""
+    print("\n== Per-step component breakdown "
+          "(structured tracer, overlap on vs off) ==")
+    cfg = get_config("gemma-7b", smoke=True)
+    params_a = _checkpointify(init_params(jax.random.PRNGKey(0), cfg))
+    params_b = perturbed_variant(params_a)
+    jobs = _overlap_workload(cfg)
+    bpt = _install_tick_bytes(cfg, params_a, params_b)
+
+    # Warmup arm populates the shared jit caches so the component tables
+    # compare scheduling overhead, not XLA compile time.
+    _run_overlap_arm(cfg, params_a, params_b, jobs, overlap=False,
+                     bytes_per_tick=bpt)
+
+    arms = ("overlap-off", "overlap-on")
+    out = {}
+    for tag in arms:
+        s = _run_overlap_arm(cfg, params_a, params_b, jobs,
+                             overlap=(tag == "overlap-on"),
+                             bytes_per_tick=bpt, tracer=Tracer())
+        s.pop("_generated")
+        out[tag] = s
+        total = sum(v for k, v in s.items() if k.startswith("component_"))
+        csv_row(f"serving/components-{tag}", total / max(s["steps"], 1) * 1e6,
+                f"total_ms={total*1e3:.1f};steps={int(s['steps'])}")
+
+    steps = {t: max(int(out[t]["steps"]), 1) for t in arms}
+    print(f"{'component':<10}" + "".join(f"{t:>24}" for t in arms))
+    print(f"{'':<10}" + f"{'total ms':>14} {'us/step':>9}" * len(arms))
+    for comp in TRACE_COMPONENTS:
+        vals = [out[t].get(f"component_{comp}_s", 0.0) for t in arms]
+        if not any(vals):
+            continue
+        print(f"{comp:<10}" + "".join(
+            f"{v*1e3:>14.2f} {v*1e6/steps[t]:>9.1f}"
+            for t, v in zip(arms, vals)))
+    print(f"-- host seconds per component (wall-clock tracer, identical "
+          f"virtual-clock schedule per arm): overlap turns "
+          f"{int(out['overlap-off']['install_stall_steps'])} token-less "
+          f"install stall steps into "
+          f"{int(out['overlap-on']['install_stall_steps'])}, finishing in "
+          f"{int(out['overlap-on']['steps'])} vs "
+          f"{int(out['overlap-off']['steps'])} steps")
+
+    if trace_out:
+        # Deterministic artifact: same workload, engine AND tracer on one
+        # VirtualClock — byte-identical across runs, Perfetto-loadable.
+        clock = VirtualClock()
+        tracer = Tracer(clock=clock)
+        _run_overlap_arm(cfg, params_a, params_b, jobs, overlap=True,
+                         bytes_per_tick=bpt, tracer=tracer, clock=clock)
+        tracer.export_chrome_trace(trace_out)
+        out["trace_events"] = len(tracer.events)
+        print(f"-- wrote deterministic Chrome trace "
+              f"({len(tracer.events)} events) to {trace_out} — load in "
+              "chrome://tracing or https://ui.perfetto.dev")
+    return out
+
+
+# ------------------------------------------------- headline persistence
+_DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serving.json")
+
+
+def _json_safe(obj):
+    """NaN/inf -> None recursively, so the dump is strict JSON."""
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
+def _headlines(results: dict) -> dict:
+    """Compress each part's summaries to its headline numbers."""
+    h = {}
+    t = results.get("tenants")
+    if t:
+        h["tenants"] = {
+            "latency_p50_s": t["reuse-on"]["latency_p50_s"],
+            "latency_p95_s": t["reuse-on"]["latency_p95_s"],
+            "tokens_per_s": t["reuse-on"]["tokens_per_s"],
+            "wire_saved_frac": t["wire_saved_frac"],
+        }
+    lay = results.get("layout")
+    if lay:
+        h["layout"] = {
+            "slot_max_concurrent": lay["slot"]["max_concurrent"],
+            "paged_max_concurrent": lay["paged"]["max_concurrent"],
+            "paged_pages_saved": lay["paged"]["kv_pages_saved"],
+            "slot_latency_p50_s": lay["slot"]["latency_p50_s"],
+            "paged_latency_p50_s": lay["paged"]["latency_p50_s"],
+        }
+    ov = results.get("overlap")
+    if ov:
+        h["overlap"] = {
+            "stall_steps_sync": ov["overlap-off"]["install_stall_steps"],
+            "stall_steps_overlap": ov["overlap-on"]["install_stall_steps"],
+            "itl_max_p95_s_sync": ov["overlap-off"]["itl_max_p95_s"],
+            "itl_max_p95_s_overlap": ov["overlap-on"]["itl_max_p95_s"],
+            "ttft_p95_s_overlap": ov["overlap-on"]["ttft_p95_s"],
+            "hidden_bytes": ov["overlap-on"]["overlap_hidden_bytes"],
+        }
+    ch = results.get("chunked")
+    if ch:
+        h["chunked"] = {
+            "itl_max_p95_s_mono": ch["chunk-off"]["itl_max_p95_s"],
+            "itl_max_p95_s_chunked": ch["chunk-on"]["itl_max_p95_s"],
+            "ttft_p95_s_chunked": ch["chunk-on"]["ttft_p95_s"],
+            "traces_bucket_on": ch["bucket-on_traces"],
+            "traces_bucket_off": ch["bucket-off_traces"],
+        }
+    pc = results.get("prefix_cache")
+    if pc:
+        h["prefix_cache"] = {
+            "prefill_tokens_off": pc["cache-off"]["prefill_tokens"],
+            "prefill_tokens_on": pc["cache-on"]["prefill_tokens"],
+            "prefix_hit_rate": pc["cache-on"]["prefix_hit_rate"],
+            "ttft_p95_s_off": pc["cache-off"]["ttft_p95_s"],
+            "ttft_p95_s_on": pc["cache-on"]["ttft_p95_s"],
+        }
+    comp = results.get("components")
+    if comp:
+        h["components"] = {
+            tag: {k: v for k, v in comp[tag].items()
+                  if k.startswith("component_")}
+            for tag in ("overlap-off", "overlap-on") if tag in comp}
+        if "trace_events" in comp:
+            h["components"]["trace_events"] = comp["trace_events"]
+    return h
+
+
+def _write_bench_json(path: str, headlines: dict) -> None:
+    doc = {"bench": "serving", "arch": "gemma-7b(smoke)",
+           "parts": headlines}
+    with open(path, "w") as f:
+        json.dump(_json_safe(doc), f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"\nwrote per-part headline numbers to {path}")
+
+
+def tenant_reuse_bench() -> dict:
     print("\n== Continuous-batching serving engine (Poisson, 2 tenants) ==")
     cfg = get_config("gemma-7b", smoke=True)
     # _checkpointify injects the asymmetric outlier tails real checkpoints
@@ -482,11 +654,40 @@ def main() -> dict:
           f"{out['reuse-on']['install_wire_bytes']/1e6:.2f} MB over "
           f"{int(out['reuse-on']['installs'])}")
     out["wire_saved_frac"] = saved
-    out["layout"] = paged_vs_slot()
-    out["overlap"] = overlap_vs_sync()
-    out["chunked"] = chunked_prefill_bench()
-    out["prefix_cache"] = prefix_cache_bench()
     return out
+
+
+def main(argv=None) -> dict:
+    p = argparse.ArgumentParser(description="serving-engine benchmarks")
+    p.add_argument("--parts", default="1,2,3,4,5,6",
+                   help="comma-separated parts to run: 1 tenant reuse, "
+                        "2 paged-vs-slot, 3 install overlap, 4 chunked "
+                        "prefill, 5 prefix cache, 6 component breakdown")
+    p.add_argument("--out", default=_DEFAULT_OUT,
+                   help="path for the BENCH_serving.json headline dump "
+                        "('' disables)")
+    p.add_argument("--trace-out", default="",
+                   help="part 6: also write the deterministic virtual-clock "
+                        "Chrome trace to this path")
+    args = p.parse_args(argv)
+    parts = sorted({int(x) for x in args.parts.split(",") if x.strip()})
+
+    results = {}
+    if 1 in parts:
+        results["tenants"] = tenant_reuse_bench()
+    if 2 in parts:
+        results["layout"] = paged_vs_slot()
+    if 3 in parts:
+        results["overlap"] = overlap_vs_sync()
+    if 4 in parts:
+        results["chunked"] = chunked_prefill_bench()
+    if 5 in parts:
+        results["prefix_cache"] = prefix_cache_bench()
+    if 6 in parts:
+        results["components"] = component_breakdown(args.trace_out)
+    if args.out:
+        _write_bench_json(args.out, _headlines(results))
+    return results
 
 
 if __name__ == "__main__":

@@ -23,10 +23,21 @@ from repro.launch.steps import cached_prefill_step, cached_serve_step
 from repro.nn.model import init_params
 
 
+def _json_safe(obj):
+    """NaN/inf -> None recursively, so metrics dumps are strict JSON."""
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
 def _run_engine(args) -> None:
     """Continuous batching across ≥ 2 tenants on one device budget."""
     from repro.serving import (EngineModel, InstallCostModel, SchedulerConfig,
-                               ServingEngine, format_summary)
+                               ServingEngine, Tracer, format_summary)
     from repro.serving.variants import perturbed_variant
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -50,8 +61,12 @@ def _run_engine(args) -> None:
     # cross-tenant delta installs when the scheduler switches models.
     weight_slots = (args.weight_slots if args.weight_slots
                     else cfg.n_layers + 1)
+    # Structured tracing costs nothing unless asked for: a wall-clock
+    # Tracer feeds both the Chrome-trace export and the per-step
+    # component_s breakdown in the summary.
+    tracer = Tracer() if args.trace_out else None
     eng = ServingEngine(
-        tenants, weight_arena_slots=weight_slots,
+        tenants, weight_arena_slots=weight_slots, tracer=tracer,
         sched=SchedulerConfig(max_prefill_per_step=4,
                               model_turn_steps=args.turn_steps,
                               policy=args.queue_policy,
@@ -76,6 +91,19 @@ def _run_engine(args) -> None:
     print(f"engine: {args.requests} requests across {len(tenants)} models, "
           f"{args.kv_slots} KV slots each, weight arena {weight_slots} slots")
     print(format_summary(summary))
+    if args.trace_out:
+        tracer.export_chrome_trace(args.trace_out)
+        print(f"wrote Chrome trace ({len(tracer.events)} events) to "
+              f"{args.trace_out} — load in chrome://tracing or "
+              "https://ui.perfetto.dev")
+    if args.metrics_json:
+        import json
+        doc = {"summary": _json_safe(summary),
+               "metrics": _json_safe(eng.metrics.registry.as_dict())}
+        with open(args.metrics_json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote metrics registry + summary to {args.metrics_json}")
 
 
 def main() -> None:
@@ -142,6 +170,15 @@ def main() -> None:
     p.add_argument("--prefix-cache-pages", type=int, default=0,
                    help="engine: cap on retained prefix-cache pages per "
                         "tenant (0 = bounded only by on-demand eviction)")
+    p.add_argument("--trace-out", type=str, default="",
+                   help="engine: write a Chrome-trace-format JSON of the "
+                        "run (per-step component spans + request lifecycle "
+                        "spans) to this path; load in chrome://tracing or "
+                        "ui.perfetto.dev")
+    p.add_argument("--metrics-json", type=str, default="",
+                   help="engine: dump the final summary and the typed "
+                        "metrics registry (counters/gauges/histograms) as "
+                        "JSON to this path")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

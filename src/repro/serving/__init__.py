@@ -8,19 +8,24 @@ from repro.serving.bucketing import PrefillProgress, bucket_for, bucket_ladder
 from repro.serving.engine import EngineModel, ServingEngine
 from repro.serving.harness import drive_simulated
 from repro.serving.kv_arena import KVArena
-from repro.serving.metrics import EngineMetrics, VirtualClock, format_summary
+from repro.serving.metrics import (Counter, EngineMetrics, Gauge, Histogram,
+                                   MetricsRegistry, VirtualClock,
+                                   format_summary)
 from repro.serving.paging import PageAllocator, PagedKVArena
 from repro.serving.prefix_cache import RadixNode, RadixPrefixCache
 from repro.serving.request import Request, RequestStatus
 from repro.serving.residency import InstallPipeline, WeightResidencyManager
 from repro.serving.sampling import request_key, sample_token
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
+from repro.serving.tracing import NULL_TRACER, NullTracer, Tracer
 from repro.streaming.plan import InstallCostModel
 
 __all__ = [
     "EngineModel", "ServingEngine", "KVArena", "PageAllocator",
     "PagedKVArena", "RadixNode", "RadixPrefixCache",
     "EngineMetrics", "VirtualClock", "format_summary",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Tracer", "NullTracer", "NULL_TRACER",
     "Request", "RequestStatus", "InstallPipeline", "InstallCostModel",
     "WeightResidencyManager", "SchedulerConfig", "StepScheduler",
     "drive_simulated", "request_key", "sample_token",

@@ -54,6 +54,7 @@ scalar oracle); the reassociation is inherent to batched matmuls.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 import time
 from typing import Any, Callable, Dict, Optional, Sequence
@@ -76,7 +77,10 @@ from repro.serving.request import Request, RequestStatus
 from repro.serving.residency import InstallPipeline, WeightResidencyManager
 from repro.serving.sampling import request_key, sample_token
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
+from repro.serving.tracing import NULL_TRACER, NullTracer, Tracer
 from repro.streaming.plan import InstallCostModel
+
+_log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -125,7 +129,8 @@ class ServingEngine:
                  prefill_chunk: int = 0,
                  bucket_growth: float = 2.0,
                  bucket_min: int = 8,
-                 staging_growth: float = 2.0):
+                 staging_growth: float = 2.0,
+                 tracer: Optional[Tracer] = None):
         if not models:
             raise ValueError("need at least one tenant model")
         names = [m.name for m in models]
@@ -156,7 +161,20 @@ class ServingEngine:
             else sum(m.cfg.n_layers for m in models),
             reuse=reuse)
 
+        # Structured tracing: NULL_TRACER (no-op, allocation-free) when
+        # disabled; a shared Tracer instance otherwise, injected into the
+        # scheduler, install pipeline, and paged arenas so resource
+        # decisions (admission verdicts, evictions, victim picks, COW)
+        # land in the same trace as the engine's component spans.
+        self.tracer: Any = tracer if tracer is not None else NULL_TRACER
+        self.residency.tracer = self.tracer
+        for arena in self.arenas.values():
+            if isinstance(arena, PagedKVArena):
+                arena.tracer = self.tracer
+                arena.allocator.tracer = self.tracer
+
         self.scheduler = StepScheduler(sched)
+        self.scheduler.tracer = self.tracer
         self.metrics = EngineMetrics()
         self.requests: Dict[int, Request] = {}
         self._clock = clock
@@ -180,6 +198,8 @@ class ServingEngine:
         self.pipeline: Optional[InstallPipeline] = (
             InstallPipeline(self.residency, self.install_cost)
             if self._ticks_per_step > 0 else None)
+        if self.pipeline is not None:
+            self.pipeline.tracer = self.tracer
 
         # Chunked prefill: prefill_chunk > 0 splits every prompt into
         # chunk-sized pieces run across steps under the scheduler's
@@ -275,8 +295,10 @@ class ServingEngine:
         if req.prompt_len + max_new_tokens > self._capacity(model):
             req.status = RequestStatus.REJECTED
             self.scheduler.rejected += 1
+            self.tracer.request_phase(req.rid, "rejected", model=model)
             return req
         self.scheduler.submit(req)
+        self.tracer.request_phase(req.rid, "queued", model=model)
         return req
 
     def preempt(self, rid: int) -> None:
@@ -295,6 +317,31 @@ class ServingEngine:
         req.preemptions += 1
         self.metrics.record_preemption()
         self.scheduler.requeue(req)
+        self.tracer.request_phase(req.rid, "preempted")
+        self._note_requeue(req, "decode preemption")
+
+    def _note_requeue(self, req: Request, reason: str) -> None:
+        """One-line per-request timeline summary on preemption or
+        pool-exhaustion requeue (spans so far + pages held + chunks
+        completed), so exhaustion livelock reports are debuggable from
+        output alone.  No-op when tracing is disabled."""
+        if not self.tracer.enabled:
+            return
+        arena = self.arenas[req.model]
+        pages = 0
+        if isinstance(arena, PagedKVArena):
+            pages = len(arena.allocator.tables.get(req.rid, ()))
+        st = self._prefills.get(req.rid)
+        chunks = (-(-st.done // self._chunk)
+                  if st is not None and self._chunk > 0 else 0)
+        self.tracer.instant("requeue", rid=req.rid, reason=reason,
+                            pages_held=pages, chunks_done=chunks)
+        _log.info(
+            "request %d (%s) requeued [%s]: timeline[%s] pages_held=%d "
+            "chunks_done=%d generated=%d preemptions=%d",
+            req.rid, req.model, reason,
+            self.tracer.request_timeline(req.rid), pages, chunks,
+            len(req.generated), req.preemptions)
 
     # ------------------------------------------------------------- step
     def _pick_token(self, req: Request, logits_row) -> int:
@@ -342,9 +389,11 @@ class ServingEngine:
                     # PREEMPTED tag is for evicted progress).
                     self.scheduler.requeue(req)
                     req.status = RequestStatus.QUEUED
+                    self._note_requeue(req, "admission page race")
                     continue
             else:
                 slot = arena.alloc(req.rid)
+            self.tracer.request_phase(req.rid, "prefilling")
             if req.prefill_start_t is None:
                 # re-prefills after preemption keep the FIRST admission
                 # time: the ttft split describes the road to the first
@@ -361,6 +410,7 @@ class ServingEngine:
                 arena.install(slot, caches, tok, len(prompt))
             req.slot = slot
             req.status = RequestStatus.RUNNING
+            self.tracer.request_phase(req.rid, "running")
             req.generated.append(tok)
             req.note_token(self._clock())
             if req.first_token_t is None:
@@ -383,6 +433,8 @@ class ServingEngine:
         req.slot = None
         req.status = RequestStatus.FINISHED
         req.finish_t = self._clock()
+        self.tracer.request_phase(req.rid, "finished",
+                                  n_generated=len(req.generated))
         self.metrics.record_finish(req)
 
     # ------------------------------------------------- chunked prefill
@@ -422,11 +474,13 @@ class ServingEngine:
                     # pre-pop check saw; head-of-queue retry next step
                     self.scheduler.requeue(req)
                     req.status = RequestStatus.QUEUED
+                    self._note_requeue(req, "staging row race")
                     continue
             else:
                 row = arena.alloc(req.rid)
             req.slot = row
             req.status = RequestStatus.PREFILLING
+            self.tracer.request_phase(req.rid, "prefilling")
             st = self._prefills.get(req.rid)
             if st is None or st.tokens != prompt:
                 # fresh prefill (or a decode-preempted request whose prompt
@@ -484,6 +538,8 @@ class ServingEngine:
         logits, st.caches = step_fn(m.params, jnp.asarray(buf), st.caches,
                                     jnp.int32(start), jnp.int32(size))
         st.done += size
+        self.tracer.instant("prefill_chunk", rid=req.rid, start=start,
+                            tokens=size)
         if st.finished:
             st.logits = logits
         return size
@@ -510,6 +566,8 @@ class ServingEngine:
             arena.install(req.slot, row, tok, n_tok)
         del self._prefills[req.rid]
         req.status = RequestStatus.RUNNING
+        self.tracer.request_phase(req.rid, "running",
+                                  tokens_skipped=st.skipped)
         req.generated.append(tok)
         req.note_token(self._clock())
         if req.first_token_t is None:
@@ -527,6 +585,8 @@ class ServingEngine:
         req.preemptions += 1
         self.metrics.record_preemption()
         self.scheduler.requeue(req)
+        self.tracer.request_phase(req.rid, "preempted")
+        self._note_requeue(req, "prefill page exhaustion")
 
     def _pump_prefills(self, allowed) -> tuple:
         """One step of chunked-prefill work: admit queued requests into
@@ -631,24 +691,29 @@ class ServingEngine:
         or via the budgeted install pipeline), admit+prefill their queued
         requests, then decode one token for every active slot."""
         now = self._clock()
-        demand = [name for name in self.models if self._can_progress(name)]
-        run_models = self.scheduler.pick_models(demand, self.residency)
+        with self.tracer.span("schedule"):
+            demand = [name for name in self.models
+                      if self._can_progress(name)]
+            run_models = self.scheduler.pick_models(demand, self.residency)
         wire = 0
         work = 0
-        if self.pipeline is None:
-            for name in run_models:
-                wire += self.residency.ensure(name, self._step_no,
-                                              pinned=set(run_models))
-            decodable = list(run_models)
-        else:
-            decodable, wire, work = self._pump_installs(run_models, demand)
+        with self.tracer.span("install"):
+            if self.pipeline is None:
+                for name in run_models:
+                    wire += self.residency.ensure(name, self._step_no,
+                                                  pinned=set(run_models))
+                decodable = list(run_models)
+            else:
+                decodable, wire, work = self._pump_installs(run_models,
+                                                            demand)
 
-        if self._chunk > 0:
-            n_prefills, prefill_tokens, n_chunks, hit_tokens = (
-                self._pump_prefills(set(decodable)))
-        else:
-            n_prefills, prefill_tokens = self._admit(set(decodable))
-            n_chunks = hit_tokens = 0
+        with self.tracer.span("prefill"):
+            if self._chunk > 0:
+                n_prefills, prefill_tokens, n_chunks, hit_tokens = (
+                    self._pump_prefills(set(decodable)))
+            else:
+                n_prefills, prefill_tokens = self._admit(set(decodable))
+                n_chunks = hit_tokens = 0
 
         n_decoded = 0
         for name in decodable:
@@ -670,47 +735,55 @@ class ServingEngine:
                 # before the step writes; pool exhaustion preempts (the
                 # request re-prefills once pages free up — ARAS-style
                 # adaptation to the occupancy map, not a hard failure)
-                for slot in arena.active_slots():
-                    if decoding(slot) and not arena.prepare_decode(slot):
-                        self.preempt(arena.owner_of(slot))
+                with self.tracer.span("page", tenant=name):
+                    for slot in arena.active_slots():
+                        if decoding(slot) and not arena.prepare_decode(slot):
+                            self.preempt(arena.owner_of(slot))
             slots = [s for s in arena.active_slots() if decoding(s)]
             if not slots:
                 continue
-            if paged:
-                tokens, pos, tables = arena.decode_inputs()
-                logits, arena.caches = self._decode[name](
-                    m.params, tokens, arena.caches, pos, tables)
-            else:
-                tokens, pos = arena.decode_inputs()
-                logits, arena.caches = self._decode[name](
-                    m.params, tokens, arena.caches, pos)
-            nxt = np.asarray(jnp.argmax(logits[:, :m.cfg.vocab], axis=-1))
-            for slot in slots:
-                req = self.requests[arena.owner_of(slot)]
-                tok = (int(nxt[slot]) if req.temperature <= 0.0
-                       else self._pick_token(req, logits[slot]))
-                req.generated.append(tok)
-                req.note_token(self._clock())
-                arena.advance(slot, tok)
-                n_decoded += 1
-                if req.done:
-                    self._finish(req)
+            with self.tracer.span("decode", tenant=name, n_slots=len(slots)):
+                if paged:
+                    tokens, pos, tables = arena.decode_inputs()
+                    logits, arena.caches = self._decode[name](
+                        m.params, tokens, arena.caches, pos, tables)
+                else:
+                    tokens, pos = arena.decode_inputs()
+                    logits, arena.caches = self._decode[name](
+                        m.params, tokens, arena.caches, pos)
+            with self.tracer.span("sample", tenant=name):
+                nxt = np.asarray(jnp.argmax(logits[:, :m.cfg.vocab],
+                                            axis=-1))
+                for slot in slots:
+                    req = self.requests[arena.owner_of(slot)]
+                    tok = (int(nxt[slot]) if req.temperature <= 0.0
+                           else self._pick_token(req, logits[slot]))
+                    req.generated.append(tok)
+                    req.note_token(self._clock())
+                    arena.advance(slot, tok)
+                    n_decoded += 1
+                    if req.done:
+                        self._finish(req)
 
-        tokens_out = n_decoded + n_prefills
-        stall = (bool(run_models) and len(decodable) < len(run_models)
-                 and tokens_out == 0 and prefill_tokens == 0
-                 and hit_tokens == 0)
-        if stall:
-            # the step produced nothing because the scheduled tenant sat
-            # waiting on installs — don't charge it a decode-slice step
-            self.scheduler.refund_turn_step()
+        with self.tracer.span("bookkeep"):
+            tokens_out = n_decoded + n_prefills
+            stall = (bool(run_models) and len(decodable) < len(run_models)
+                     and tokens_out == 0 and prefill_tokens == 0
+                     and hit_tokens == 0)
+            if stall:
+                # the step produced nothing because the scheduled tenant sat
+                # waiting on installs — don't charge it a decode-slice step
+                self.scheduler.refund_turn_step()
 
-        kv_used = kv_total = cached_pages = 0
-        for arena in self.arenas.values():
-            if isinstance(arena, PagedKVArena):
-                kv_used += arena.allocator.n_used
-                kv_total += arena.allocator.n_pages
-                cached_pages += arena.allocator.tree.n_cached
+            kv_used = kv_total = cached_pages = 0
+            for arena in self.arenas.values():
+                if isinstance(arena, PagedKVArena):
+                    kv_used += arena.allocator.n_used
+                    kv_total += arena.allocator.n_pages
+                    cached_pages += arena.allocator.tree.n_cached
+        if self.tracer.enabled:
+            self.tracer.counter("kv_used_pages", kv_used)
+            self.tracer.counter("queue_depth", self.scheduler.queue_depth)
         self.metrics.record_step(StepRecord(
             t=now,
             n_active=sum(len(a.active_slots()) for a in self.arenas.values()),
@@ -726,7 +799,8 @@ class ServingEngine:
             prefill_tokens=prefill_tokens,
             n_prefill_chunks=n_chunks,
             prefix_hit_tokens=hit_tokens,
-            prefix_cached_pages=cached_pages))
+            prefix_cached_pages=cached_pages,
+            component_s=self.tracer.step_components()))
         self._step_no += 1
         self._wall_s += self._clock() - now
 

@@ -1,5 +1,10 @@
 """Engine metrics surface: latency percentiles, throughput, queue depth,
-and the weight-arena install accounting merged in by the engine."""
+and the weight-arena install accounting merged in by the engine.
+
+`EngineMetrics` is backed by a typed `MetricsRegistry` of counters,
+gauges, and histograms; the legacy attribute names (`tokens_generated`,
+`preemptions`, ...) and every `summary()` key are preserved on top of it.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -14,6 +19,118 @@ def _pct(xs: List[float], p: float) -> float:
     if not xs:
         return float("nan")
     return float(np.percentile(np.asarray(xs, np.float64), p))
+
+
+class Counter:
+    """Monotonic counter (ints stay ints so summaries render cleanly)."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, delta: float = 1) -> None:
+        if delta < 0:
+            raise ValueError(f"counter {self.name} cannot decrease")
+        self.value += delta
+
+
+class Gauge:
+    """Point-in-time value with a high-water mark."""
+
+    __slots__ = ("name", "value", "max")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+        self.max = 0
+
+    def set(self, value: float) -> None:
+        self.value = value
+        if value > self.max:
+            self.max = value
+
+
+class Histogram:
+    """Sample accumulator with numpy-percentile quantiles.
+
+    `quantile(p)` matches the legacy `_pct` helper exactly: linear
+    interpolation via `np.percentile`, NaN on an empty window.
+    """
+
+    __slots__ = ("name", "values")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.values: List[float] = []
+
+    def observe(self, value: float) -> None:
+        self.values.append(float(value))
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    @property
+    def sum(self) -> float:
+        return float(sum(self.values))
+
+    def quantile(self, p: float) -> float:
+        return _pct(self.values, p)
+
+    def mean(self) -> float:
+        return float(np.mean(self.values)) if self.values else float("nan")
+
+
+class MetricsRegistry:
+    """Typed metric registry: one named instrument per metric.
+
+    `counter`/`gauge`/`histogram` get-or-create; asking for an existing
+    name with a different type is an error.  `as_dict()` flattens every
+    instrument to floats for JSON export (`serve.py --metrics-json`).
+    """
+
+    def __init__(self):
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = cls(name)
+            self._metrics[name] = m
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as "
+                f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def as_dict(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for name in self.names():
+            m = self._metrics[name]
+            if isinstance(m, Counter):
+                out[name] = float(m.value)
+            elif isinstance(m, Gauge):
+                out[name] = float(m.value)
+                out[f"{name}_max"] = float(m.max)
+            elif isinstance(m, Histogram):
+                out[f"{name}_count"] = float(m.count)
+                out[f"{name}_p50"] = m.quantile(50)
+                out[f"{name}_p95"] = m.quantile(95)
+        return out
 
 
 class VirtualClock:
@@ -62,32 +179,87 @@ class StepRecord:
     # and the retained-page gauge across all paged tenants
     prefix_hit_tokens: int = 0
     prefix_cached_pages: int = 0
+    # tracer component breakdown for this step: component name -> seconds
+    # spent inside spans of that component (empty when tracing is off)
+    component_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def _counter_property(attr: str):
+    """Expose a registry counter under a legacy EngineMetrics attribute."""
+
+    def fget(self) -> int:
+        return getattr(self, attr).value
+
+    def fset(self, value) -> None:
+        getattr(self, attr).value = value
+
+    return property(fget, fset)
 
 
 class EngineMetrics:
-    def __init__(self):
+    """Aggregate engine metrics, backed by a typed `MetricsRegistry`.
+
+    The legacy counter attributes (`tokens_generated`, `preemptions`, ...)
+    are properties over registry instruments, so both the old attribute
+    surface and `registry.as_dict()` see the same numbers.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
         self.finished: List[Request] = []
         self.steps: List[StepRecord] = []
-        self.tokens_generated = 0
-        self.max_concurrent = 0
-        self.preemptions = 0
-        self.prefill_tokens = 0
-        self.prefill_chunks = 0
-        self.prefix_hit_tokens = 0
+        r = self.registry
+        self._c_tokens = r.counter("engine_tokens_generated")
+        self._c_preemptions = r.counter("engine_preemptions")
+        self._c_prefill_tokens = r.counter("engine_prefill_tokens")
+        self._c_prefill_chunks = r.counter("engine_prefill_chunks")
+        self._c_prefix_hit_tokens = r.counter("engine_prefix_hit_tokens")
+        self._g_concurrent = r.gauge("engine_concurrent")
+        self._g_queue_depth = r.gauge("engine_queue_depth")
+        self._h_latency = r.histogram("request_latency_s")
+        self._h_ttft = r.histogram("request_ttft_s")
+        self._h_ttft_queue = r.histogram("request_ttft_queue_s")
+        self._h_ttft_prefill = r.histogram("request_ttft_prefill_s")
+        self._h_itl_max = r.histogram("request_itl_max_s")
+
+    tokens_generated = _counter_property("_c_tokens")
+    preemptions = _counter_property("_c_preemptions")
+    prefill_tokens = _counter_property("_c_prefill_tokens")
+    prefill_chunks = _counter_property("_c_prefill_chunks")
+    prefix_hit_tokens = _counter_property("_c_prefix_hit_tokens")
+
+    @property
+    def max_concurrent(self) -> int:
+        return self._g_concurrent.max
+
+    @max_concurrent.setter
+    def max_concurrent(self, value: int) -> None:
+        self._g_concurrent.max = value
 
     def record_step(self, rec: StepRecord) -> None:
         self.steps.append(rec)
-        self.max_concurrent = max(self.max_concurrent, rec.n_active)
-        self.tokens_generated += rec.n_decoded + rec.n_prefills
-        self.prefill_tokens += rec.prefill_tokens
-        self.prefill_chunks += rec.n_prefill_chunks
-        self.prefix_hit_tokens += rec.prefix_hit_tokens
+        self._g_concurrent.set(rec.n_active)
+        self._g_queue_depth.set(rec.queue_depth)
+        self._c_tokens.inc(rec.n_decoded + rec.n_prefills)
+        self._c_prefill_tokens.inc(rec.prefill_tokens)
+        self._c_prefill_chunks.inc(rec.n_prefill_chunks)
+        self._c_prefix_hit_tokens.inc(rec.prefix_hit_tokens)
 
     def record_finish(self, req: Request) -> None:
         self.finished.append(req)
+        if req.latency is not None:
+            self._h_latency.observe(req.latency)
+        if req.ttft is not None:
+            self._h_ttft.observe(req.ttft)
+        if req.ttft_queue is not None:
+            self._h_ttft_queue.observe(req.ttft_queue)
+        if req.ttft_prefill is not None:
+            self._h_ttft_prefill.observe(req.ttft_prefill)
+        if req.max_itl is not None:
+            self._h_itl_max.observe(req.max_itl)
 
     def record_preemption(self) -> None:
-        self.preemptions += 1
+        self._c_preemptions.inc()
 
     def summary(self, wall_s: float,
                 residency: Optional[Dict[str, float]] = None,
@@ -95,13 +267,13 @@ class EngineMetrics:
                 paging: Optional[Dict[str, float]] = None,
                 prefill_cache: Optional[Dict[str, int]] = None
                 ) -> Dict[str, float]:
-        lat = [r.latency for r in self.finished if r.latency is not None]
-        ttft = [r.ttft for r in self.finished if r.ttft is not None]
-        ttft_q = [r.ttft_queue for r in self.finished
-                  if r.ttft_queue is not None]
-        ttft_p = [r.ttft_prefill for r in self.finished
-                  if r.ttft_prefill is not None]
-        itl = [r.max_itl for r in self.finished if r.max_itl is not None]
+        # Histograms are fed by record_finish with exactly the non-None
+        # per-request stats, so quantiles match the legacy list-comp path.
+        lat = self._h_latency.values
+        ttft = self._h_ttft.values
+        ttft_q = self._h_ttft_queue.values
+        ttft_p = self._h_ttft_prefill.values
+        itl = self._h_itl_max.values
         depths = [s.queue_depth for s in self.steps]
         out = {
             "requests_finished": float(len(self.finished)),
@@ -144,6 +316,14 @@ class EngineMetrics:
                 sum(s.overlap_hidden_bytes for s in self.steps)),
             "wall_s": wall_s,
         }
+        # Tracer component breakdown: total seconds per component across
+        # all steps (only present when a tracer fed StepRecord.component_s).
+        comp_totals: Dict[str, float] = {}
+        for s_rec in self.steps:
+            for comp, secs in s_rec.component_s.items():
+                comp_totals[comp] = comp_totals.get(comp, 0.0) + secs
+        for comp, secs in sorted(comp_totals.items()):
+            out[f"component_{comp}_s"] = secs
         if prefill_cache:
             # jit-trace accounting from launch.steps.prefill_cache_info —
             # process-wide (step caches are shared across engine instances

@@ -52,6 +52,7 @@ import numpy as np
 from repro.nn.config import ModelConfig
 from repro.nn.transformer import layer_kind, stack_plan
 from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.tracing import NULL_TRACER
 
 
 class PageAllocator:
@@ -59,6 +60,10 @@ class PageAllocator:
 
     Physical page ids run 1..n_pages; id 0 is the arena's reserved scratch
     page and is never handed out."""
+
+    # structured-event sink for eviction/COW/donation decisions; the
+    # engine swaps in its shared Tracer, standalone use keeps the no-op
+    tracer = NULL_TRACER
 
     def __init__(self, n_pages: int, page_size: int, *,
                  retain: bool = False, max_cached: Optional[int] = None):
@@ -70,8 +75,13 @@ class PageAllocator:
         self._free: deque = deque(range(1, n_pages + 1))
         self.refcount = np.zeros(n_pages + 1, np.int32)
         self.tables: Dict[int, List[int]] = {}      # rid -> physical pages
-        # prefix index + retention layer: radix tree over token-block edges
-        self.tree = RadixPrefixCache(page_size, max_cached=max_cached)
+        # prefix index + retention layer: radix tree over token-block
+        # edges; the tree's incremental evictable count watches our
+        # refcounts, so every crossing of the ==1 boundary is reported
+        # back through note_refcount (see _pin / free_page)
+        self.tree = RadixPrefixCache(
+            page_size, max_cached=max_cached,
+            refcount_of=lambda page: int(self.refcount[page]))
         # lifetime stats
         self.pages_allocated = 0
         self.shared_hits = 0
@@ -111,6 +121,19 @@ class PageAllocator:
         if self.refcount[page] == 0:
             self.tree.drop_page(page, self.free_page)
             self._free.append(page)
+        elif self.refcount[page] == 1:
+            # last external holder left a retained page: it just became
+            # solely tree-held, i.e. evictable — tell the tree's count
+            self.tree.note_refcount(page)
+
+    def _pin(self, page: int) -> None:
+        """Take one shared reference on a resident prefix page.  The 1→2
+        crossing makes a retained page non-evictable; the tree's
+        incremental count hears about it here."""
+        self.refcount[page] += 1
+        self.shared_hits += 1
+        if self.refcount[page] == 2:
+            self.tree.note_refcount(page)
 
     def _sole(self, page: int) -> bool:
         """Nobody but the tree holds this page — the eviction predicate."""
@@ -139,16 +162,23 @@ class PageAllocator:
     # ----------------------------------------------------------- eviction
     def evictable_pages(self, exclude: FrozenSet[int] = frozenset()) -> int:
         """Pages on-demand eviction could free right now (exact, so
-        admission promises only what `ensure_free` can deliver)."""
-        return self.tree.evictable(self._sole, frozenset(exclude))
+        admission promises only what `ensure_free` can deliver).  O(1)
+        plus O(|exclude| chain) — the incrementally maintained count, not
+        a tree walk (the scheduling hot path calls this per overflow)."""
+        return self.tree.evictable_count(frozenset(exclude))
 
     def ensure_free(self, need: int) -> bool:
         """LRU-evict retained pages until `need` pages are free.  False
         when the cache cannot cover the shortfall (callers pre-check with
         `evictable_pages` to fail without side effects)."""
+        evicted = 0
         while len(self._free) < need:
             if not self.tree.evict_lru(self._sole, self.free_page):
                 return False
+            evicted += 1
+        if evicted:
+            self.tracer.instant("kv_evict", n_pages=evicted,
+                                cached_left=self.tree.n_cached)
         return True
 
     # ------------------------------------------------------ request level
@@ -163,8 +193,7 @@ class PageAllocator:
         n_blocks = self.blocks_for(len(tokens))
         shared = self.match_prefix(tokens)
         for page in shared:          # pin first: pinned pages never evict
-            self.refcount[page] += 1
-            self.shared_hits += 1
+            self._pin(page)
         need = n_blocks - len(shared)
         if need > self.n_free + self.evictable_pages():
             for page in shared:      # unpin — no side effects on failure
@@ -192,8 +221,7 @@ class PageAllocator:
             raise ValueError(f"rid {rid} already holds a table")
         shared = self.match_prefix(tokens)
         for page in shared:
-            self.refcount[page] += 1
-            self.shared_hits += 1
+            self._pin(page)
         self.tables[rid] = list(shared)
         return len(shared)
 
@@ -237,6 +265,7 @@ class PageAllocator:
         self.free_page(old)          # our ref only; other holders keep it
         self.tables[rid][block] = new
         self.cow_copies += 1
+        self.tracer.instant("kv_cow", rid=rid, block=block, src=old, dst=new)
         return old, new
 
     def free_table(self, rid: int,
@@ -249,7 +278,15 @@ class PageAllocator:
         table = self.tables.pop(rid)
         if (self.retain and donate_tokens
                 and len(table) == self.blocks_for(len(donate_tokens))):
-            self.tree.donate(tuple(donate_tokens), table, self.free_page)
+            ev0 = self.tree.evictions
+            gained = self.tree.donate(tuple(donate_tokens), table,
+                                      self.free_page)
+            # cap-enforcement evictions happen inside donate, not
+            # ensure_free — surface them here so the trace accounts for
+            # every LRU eviction the summary reports
+            self.tracer.instant("kv_donate", rid=rid, n_pages=len(table),
+                                retained=gained,
+                                cap_evictions=self.tree.evictions - ev0)
         else:
             for page in table:
                 self.free_page(page)
@@ -376,6 +413,9 @@ class PagedKVArena:
     ceil(len/page_size) of them, up to the whole pool."""
 
     layout = "paged"
+    # structured-event sink (shared with self.allocator); the engine
+    # swaps in its Tracer, standalone use keeps the no-op
+    tracer = NULL_TRACER
 
     def __init__(self, cfg: ModelConfig, n_rows: int, n_pages: int,
                  page_size: int, *, prefix_cache: bool = False,
@@ -440,7 +480,11 @@ class PagedKVArena:
         # matched pages are about to be pinned, not consumed — exclude
         # them from the evictable count so the promise stays exact (an
         # optimistic count would requeue-livelock the engine)
-        return need <= a.n_free + a.evictable_pages(frozenset(shared))
+        ok = need <= a.n_free + a.evictable_pages(frozenset(shared))
+        if self.tracer.enabled:
+            self.tracer.instant("kv_admit", ok=ok, need=need,
+                                free=a.n_free, shared=len(shared))
+        return ok
 
     # ------------------------------------------------------------- rows
     def active_slots(self) -> List[int]:

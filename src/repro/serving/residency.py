@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.nn.config import ModelConfig
 from repro.nn.transformer import stack_plan
+from repro.serving.tracing import NULL_TRACER
 from repro.streaming.delta import QuantizedStore
 from repro.streaming.executor import _split_block_params
 from repro.streaming.plan import InstallCostModel
@@ -74,6 +75,10 @@ class ResidencyStats:
 
 
 class WeightResidencyManager:
+    # structured-event sink for committed installs; the engine swaps in
+    # its shared Tracer, standalone use keeps the no-op
+    tracer = NULL_TRACER
+
     def __init__(self, models: Dict[str, Tuple[Any, ModelConfig]],
                  arena_slots: int, *, reuse: bool = True):
         store_input: List[Tuple[str, List[np.ndarray]]] = []
@@ -169,6 +174,12 @@ class WeightResidencyManager:
         self.slots[slot] = layer
         self.resident[layer] = slot
         self._stamp[slot] = step
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "install_land", layer=layer, slot=slot, wire=wire,
+                model=self.model_of[layer],
+                victim=(None if occupant is None
+                        else self.model_of[occupant]))
         return wire
 
     def ensure(self, model: str, step: int,
@@ -235,6 +246,10 @@ class InstallPipeline:
     `streaming/executor.py` installing layer i+1 behind layer i's compute).
     """
 
+    # structured-event sink for begin/abort/victim-pick decisions; the
+    # engine swaps in its shared Tracer, standalone use keeps the no-op
+    tracer = NULL_TRACER
+
     def __init__(self, residency: WeightResidencyManager,
                  cost: InstallCostModel):
         self.res = residency
@@ -262,9 +277,13 @@ class InstallPipeline:
             return
         if self._cur is not None:
             self.aborts += 1
+            self.tracer.instant("install_abort", layer=self._cur[0],
+                                reason="retarget", target=model)
             self._cur = None
         self.target = model
         self._missing = missing
+        self.tracer.instant("install_begin", target=model,
+                            missing=len(missing), step=step)
 
     def _evictable(self, slot: int, pinned: Set[str]) -> bool:
         occ = self.res.slots[slot]
@@ -308,11 +327,16 @@ class InstallPipeline:
                 self._missing.remove(layer)   # _missing never holds in-flight
                 t = self.cost.ticks_for(wire)
                 self._cur = [layer, slot, t, t, wire]
+                if self.tracer.enabled:
+                    self.tracer.instant("install_victim", layer=layer,
+                                        slot=slot, wire=wire, ticks=t)
             elif not self._evictable(self._cur[1], pinned):
                 # our victim got re-pinned (e.g. the outgoing tenant's turn
                 # did not actually end) — drop the partial transfer and put
                 # the layer back on the queue
                 self.aborts += 1
+                self.tracer.instant("install_abort", layer=self._cur[0],
+                                    reason="victim repinned")
                 self._missing.append(self._cur[0])
                 self._cur = None
                 continue

@@ -15,6 +15,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.serving.request import Request, RequestStatus
+from repro.serving.tracing import NULL_TRACER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +48,10 @@ class SchedulerConfig:
 
 
 class StepScheduler:
+    # structured-event sink for admission/requeue/turn decisions; the
+    # engine swaps in its shared Tracer, standalone use keeps the no-op
+    tracer = NULL_TRACER
+
     def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
         self.cfg = cfg
         self.queue: List[Request] = []
@@ -68,6 +73,8 @@ class StepScheduler:
         if len(self.queue) >= self.cfg.max_queue:
             req.status = RequestStatus.REJECTED
             self.rejected += 1
+            self.tracer.instant("sched_reject", rid=req.rid,
+                                queue_depth=len(self.queue))
             return False
         self.queue.append(req)
         return True
@@ -166,5 +173,7 @@ class StepScheduler:
             after = [m for m in demand if m > (self._turn_model or "")]
             self._turn_model = after[0] if after else demand[0]
             self._turn_left = max(self.cfg.model_turn_steps, 1)
+            self.tracer.instant("turn_rotate", model=self._turn_model,
+                                steps=self._turn_left)
         self._turn_left -= 1
         return [self._turn_model]

@@ -67,6 +67,24 @@ def _check_invariants(a: PageAllocator):
         assert a.refcount[page] >= 0, "negative refcount"
         assert (page in free) == (a.refcount[page] == 0)
     assert a.n_free + int((a.refcount[1:] > 0).sum()) == a.n_pages
+    # the incremental evictable count (heap-era bookkeeping) must never
+    # drift from the O(tree) reference walk, with and without an exclude
+    # set (can_admit excludes the prefix it is about to pin)
+    assert a.tree.evictable_count() == a.tree.evictable_walk(a._sole), (
+        "incremental evictable count drifted from the reference walk")
+    if retained:
+        excl = frozenset(list(retained)[:2])
+        assert (a.tree.evictable_count(excl)
+                == a.tree.evictable_walk(a._sole, excl)), (
+            "evictable count with exclude drifted from the walk")
+    # every retained leaf must own a live heap entry carrying its current
+    # stamp — otherwise a candidate could become invisible to evict_lru
+    entries = {(p, s) for s, _, p in a.tree._heap}
+    for node in (a.tree._by_page[p] for p in retained):
+        if not node.children:
+            assert (node.page, node.stamp) in entries, (
+                f"retained leaf page {node.page} missing from the "
+                "candidate heap")
 
 
 def _check_match_block_aligned(a: PageAllocator, tokens):
@@ -285,6 +303,61 @@ def test_match_is_incremental_o_blocks():
     pages = a.match_prefix(tokens, touch=False)
     assert len(pages) == 64
     assert probes == 64, f"{probes} probes for 64 blocks (not incremental)"
+
+
+def test_eviction_is_heap_ordered_not_a_tree_scan():
+    """The quadratic path is gone: draining N retained leaves costs O(1)
+    predicate probes per eviction off the stamp-ordered candidate heap —
+    not an O(tree) leaf scan each — never falls back to the reference
+    walk, and still evicts in exact LRU (donation stamp) order.  The
+    admission-side evictable count likewise answers from the incremental
+    counter without touching the walk."""
+    a = PageAllocator(64, 2, retain=True)
+    n_leaves = 32
+    for i in range(n_leaves):
+        tokens = (i, i)                     # distinct single-block chains
+        got = a.alloc_table(i, tokens)
+        assert got is not None
+        a.register(i, tokens)
+        a.free_table(i, donate_tokens=tokens)
+    assert a.tree.n_cached == n_leaves
+    donated_pages = [a.tree.match((i, i), touch=False)[0]
+                     for i in range(n_leaves)]
+
+    def forbid(*args, **kwargs):            # production must not walk
+        raise AssertionError("O(tree) reference scan used on the "
+                             "production eviction path")
+
+    a.tree._evictable_leaf = forbid
+    a.tree.evictable_walk = forbid
+
+    # admission count: pure counter read, no walk
+    assert a.evictable_pages() == n_leaves
+    assert a.evictable_pages(frozenset(donated_pages[:3])) == n_leaves - 3
+
+    sole_calls = 0
+
+    def counting_sole(page):
+        nonlocal sole_calls
+        sole_calls += 1
+        return a._sole(page)
+
+    evicted = []
+
+    def record_free(page):
+        evicted.append(donated_pages.index(page))
+        a.free_page(page)
+
+    while a.tree.evict_lru(counting_sole, record_free):
+        pass
+    assert a.tree.n_cached == 0
+    # one structurally-valid candidate pop (= one predicate probe) per
+    # eviction; the old scan paid n_leaves probes per eviction (~530 here)
+    assert sole_calls <= n_leaves + 4, (
+        f"{sole_calls} predicate probes draining {n_leaves} leaves — "
+        "eviction is scanning, not popping the heap")
+    # LRU order: donation order is stamp order
+    assert evicted == list(range(n_leaves))
 
 
 # ------------------------------------------------------- engine level

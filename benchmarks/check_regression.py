@@ -1,0 +1,151 @@
+"""Bench regression gate: compare a fresh `serving_bench` run against the
+committed `BENCH_serving.json` trajectory, per-metric and direction-aware.
+
+Only the virtual-clock parts are gated (overlap, chunked, prefix_cache,
+wear) — their numbers are deterministic by construction, so a tolerance
+breach is a real behaviour change, not host noise.  The wall-clock parts
+(tenants, layout, components) time real host seconds and are reported by
+the bench but never gated here.
+
+Each gated metric carries a direction ("lower" = smaller is better,
+"higher" = bigger is better) and a relative tolerance; a fresh value past
+`base * (1 ± tol)` on the bad side is a regression.  Only metrics present
+in BOTH documents are compared, so adding a metric to the bench never
+breaks the gate against an older baseline.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --parts 3,4,5,7 \
+        --out fresh-bench.json
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --fresh fresh-bench.json
+
+Exit code 0 = no regressions (or --warn-only), 1 = at least one metric
+regressed, 2 = bad input (missing file, no comparable metrics).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+_DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serving.json")
+
+# part -> metric -> (direction, relative tolerance).  Deterministic step
+# counters (stall steps, trace counts) get tolerance 0.0: any change is a
+# schedule change and should be looked at.  Virtual-time latencies get
+# 10% headroom for workload-constant drift (e.g. a new admission rule
+# shifting one request by a step), Gini 15% (a ratio of small counts).
+SPECS: Dict[str, Dict[str, Tuple[str, float]]] = {
+    "overlap": {
+        "stall_steps_overlap": ("lower", 0.0),
+        "itl_max_p95_s_overlap": ("lower", 0.10),
+        "ttft_p95_s_overlap": ("lower", 0.10),
+        "hidden_bytes": ("higher", 0.10),
+    },
+    "chunked": {
+        "itl_max_p95_s_chunked": ("lower", 0.10),
+        "ttft_p95_s_chunked": ("lower", 0.10),
+        "traces_bucket_on": ("lower", 0.0),
+    },
+    "prefix_cache": {
+        "prefill_tokens_on": ("lower", 0.05),
+        "prefix_hit_rate": ("higher", 0.05),
+        "ttft_p95_s_on": ("lower", 0.10),
+    },
+    "wear": {
+        "install_energy_j_on": ("lower", 0.10),
+        "install_energy_j_off": ("lower", 0.10),
+        "kv_write_energy_j": ("lower", 0.10),
+        "kv_page_writes": ("lower", 0.10),
+        "wear_gini_weight": ("lower", 0.15),
+    },
+}
+
+
+def _regressed(base: float, fresh: float, direction: str, tol: float) -> bool:
+    if direction == "lower":
+        return fresh > base * (1.0 + tol) + 1e-12
+    if direction == "higher":
+        return fresh < base * (1.0 - tol) - 1e-12
+    raise ValueError(f"unknown direction {direction!r}")
+
+
+def compare(baseline_parts: Dict, fresh_parts: Dict) -> List[Dict]:
+    """Per-metric comparison rows for every gated metric present in both
+    documents; each row carries the verdict in `regressed`."""
+    rows: List[Dict] = []
+    for part, metrics in SPECS.items():
+        base_p = baseline_parts.get(part)
+        fresh_p = fresh_parts.get(part)
+        if not isinstance(base_p, dict) or not isinstance(fresh_p, dict):
+            continue
+        for metric, (direction, tol) in metrics.items():
+            if metric not in base_p or metric not in fresh_p:
+                continue
+            base, fresh = float(base_p[metric]), float(fresh_p[metric])
+            rows.append({
+                "part": part, "metric": metric,
+                "base": base, "fresh": fresh,
+                "direction": direction, "tol": tol,
+                "regressed": _regressed(base, fresh, direction, tol),
+            })
+    return rows
+
+
+def _load_parts(path: str) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    parts = doc.get("parts")
+    if not isinstance(parts, dict):
+        raise ValueError(f"{path}: no 'parts' object "
+                         "(not a serving_bench headline dump?)")
+    return parts
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="direction-aware bench regression gate")
+    p.add_argument("--baseline", default=_DEFAULT_BASELINE,
+                   help="committed trajectory to gate against "
+                        "(default: repo BENCH_serving.json)")
+    p.add_argument("--fresh", required=True,
+                   help="headline dump of the fresh bench run")
+    p.add_argument("--warn-only", action="store_true",
+                   help="report regressions but exit 0 anyway")
+    args = p.parse_args(argv)
+
+    try:
+        baseline = _load_parts(args.baseline)
+        fresh = _load_parts(args.fresh)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"regression gate: cannot load inputs: {e}")
+        return 2
+
+    rows = compare(baseline, fresh)
+    if not rows:
+        print(f"regression gate: no gated metrics shared between "
+              f"{args.baseline} and {args.fresh}")
+        return 2
+
+    width = max(len(f"{r['part']}/{r['metric']}") for r in rows)
+    print(f"{'metric':<{width}}  {'dir':<6} {'tol':>5}  "
+          f"{'baseline':>12}  {'fresh':>12}  verdict")
+    n_bad = 0
+    for r in rows:
+        verdict = "REGRESSED" if r["regressed"] else "ok"
+        n_bad += r["regressed"]
+        print(f"{r['part'] + '/' + r['metric']:<{width}}  "
+              f"{r['direction']:<6} {r['tol']:>4.0%}  "
+              f"{r['base']:>12.6g}  {r['fresh']:>12.6g}  {verdict}")
+    print(f"regression gate: {n_bad}/{len(rows)} gated metrics regressed "
+          f"vs {args.baseline}")
+    if n_bad and args.warn_only:
+        print("--warn-only: reporting without failing")
+        return 0
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

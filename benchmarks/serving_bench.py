@@ -49,6 +49,14 @@ host seconds, printed as an overlap-on vs overlap-off table.  With
 `--trace-out` it also re-runs the overlap arm with engine AND tracer on
 one `VirtualClock` and writes the byte-identical Chrome-trace artifact.
 
+Part 7 — wear & write energy: the part-1 reuse-on/off comparison re-run on
+a virtual clock with paged KV + prefix cache on both tenants, priced in
+joules through the ARAS energy model.  The schedule is identical across
+arms (instant installs; reuse only changes install accounting), so the
+reuse-on arm must spend strictly less install write energy — the §V-C
+equal-skip pulses — while the prefix cache's avoided page writes and the
+per-slot/per-page wear Gini are reported off the engine's WearMap.
+
 Every run writes the per-part headline numbers to `BENCH_serving.json`
 at the repo root (override with `--out`, disable with `--out ''`), so
 the perf trajectory persists commit over commit.  `--parts` selects a
@@ -533,6 +541,101 @@ def component_breakdown(trace_out: str = "") -> dict:
     return out
 
 
+# -------------------------------------- wear & write energy (part 7)
+WEAR_STEP_DT = 1e-3         # one simulated engine step = 1 ms
+WEAR_N_PAGES = 48
+WEAR_SYS_LEN = 16           # shared system prompt (2 full pages)
+
+
+def _wear_workload(cfg, seed: int = 9, n: int = 14):
+    """Two-tenant Poisson arrivals in virtual time behind one shared
+    system prompt: tenant switches produce weight installs (the flip
+    plane), prefix-cache hits produce avoided page writes (the KV
+    plane)."""
+    rng = np.random.default_rng(seed)
+    sys_prefix = rng.integers(1, cfg.vocab, WEAR_SYS_LEN).tolist()
+    t, jobs = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(2.0)) * WEAR_STEP_DT
+        plen = int(rng.integers(3, 10))
+        prompt = sys_prefix + rng.integers(1, cfg.vocab, plen).tolist()
+        jobs.append((t, "base" if i % 2 == 0 else "variant", prompt,
+                     int(rng.integers(6, 12))))
+    return jobs
+
+
+def _run_wear_arm(cfg, params_a, params_b, jobs, *, reuse: bool):
+    """One wear arm: paged KV + prefix cache on both tenants, instant
+    installs on a virtual clock — the schedule is identical across reuse
+    arms (reuse only changes install accounting, decode runs on the
+    full-precision params), so the energy comparison is apples to
+    apples.  Returns (engine, summary) — the caller reads the wear map
+    off the engine."""
+    clock = VirtualClock()
+    kv = dict(kv_slots=4, max_seq=64, kv_layout="paged",
+              page_size=PAGE_SIZE, n_pages=WEAR_N_PAGES, prefix_cache=True)
+    eng = ServingEngine(
+        [EngineModel("base", params_a, cfg, **kv),
+         EngineModel("variant", params_b, cfg, **kv)],
+        weight_arena_slots=cfg.n_layers + 1,   # forces tenant swaps
+        reuse=reuse,
+        sched=SchedulerConfig(max_prefill_per_step=4,
+                              model_turn_steps=TURN_STEPS),
+        clock=clock)
+    summary = drive_simulated(eng, clock, jobs, dt=WEAR_STEP_DT)
+    summary["_generated"] = {r.rid: list(r.generated)
+                             for r in eng.requests.values()}
+    return eng, summary
+
+
+def wear_energy_bench(wear_json: str = "") -> dict:
+    print("\n== Wear & write energy "
+          "(reuse on vs off, virtual clock, 2 tenants, paged KV) ==")
+    cfg = get_config("gemma-7b", smoke=True)
+    params_a = _checkpointify(init_params(jax.random.PRNGKey(0), cfg))
+    params_b = perturbed_variant(params_a)
+    jobs = _wear_workload(cfg)
+
+    out = {}
+    engines = {}
+    for reuse in (False, True):
+        tag = "reuse-on" if reuse else "reuse-off"
+        eng, s = _run_wear_arm(cfg, params_a, params_b, jobs, reuse=reuse)
+        engines[tag] = eng
+        out[tag] = s
+        csv_row(f"serving/wear-{tag}", s["install_energy_j"] * 1e6,
+                f"flips={int(s['install_cell_flips'])};"
+                f"pulses={int(s['install_write_pulses'])};"
+                f"kv_writes={int(s['kv_page_writes'])}")
+        print(f"-- {tag}:")
+        print(format_summary(s))
+    off, on = out["reuse-off"], out["reuse-on"]
+    assert on["_generated"] == off["_generated"], \
+        "reuse changed decoded tokens"
+    assert on["steps"] == off["steps"], "reuse changed the schedule"
+    assert on["install_energy_j"] < off["install_energy_j"], \
+        "§V-C equal-skip install must spend strictly less write energy"
+    print(f"-- same schedule ({int(on['steps'])} steps, token-for-token "
+          f"identical): install write energy "
+          f"{off['install_energy_j']*1e3:.3f} -> "
+          f"{on['install_energy_j']*1e3:.3f} mJ "
+          f"({1 - on['install_energy_j']/off['install_energy_j']:.1%} "
+          f"saved by §V-C equal-skip), KV page writes "
+          f"{int(on['kv_page_writes'])} "
+          f"({int(on['kv_page_writes_avoided'])} avoided via shared "
+          f"prefixes, {on['kv_write_energy_j']*1e3:.3f} mJ); wear gini "
+          f"weight {on['wear_gini_weight']:.3f}, kv {on['wear_gini_kv']:.3f}")
+    if wear_json:
+        with open(wear_json, "w") as f:
+            json.dump(engines["reuse-on"].wear.as_json(), f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"-- wrote reuse-on wear map to {wear_json}")
+    for s in out.values():
+        s.pop("_generated")
+    return out
+
+
 # ------------------------------------------------- headline persistence
 _DEFAULT_OUT = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -598,6 +701,19 @@ def _headlines(results: dict) -> dict:
             "ttft_p95_s_off": pc["cache-off"]["ttft_p95_s"],
             "ttft_p95_s_on": pc["cache-on"]["ttft_p95_s"],
         }
+    w = results.get("wear")
+    if w:
+        h["wear"] = {
+            "install_energy_j_off": w["reuse-off"]["install_energy_j"],
+            "install_energy_j_on": w["reuse-on"]["install_energy_j"],
+            "install_cell_flips_on": w["reuse-on"]["install_cell_flips"],
+            "kv_write_energy_j": w["reuse-on"]["kv_write_energy_j"],
+            "kv_page_writes": w["reuse-on"]["kv_page_writes"],
+            "kv_page_writes_avoided":
+                w["reuse-on"]["kv_page_writes_avoided"],
+            "wear_gini_weight": w["reuse-on"]["wear_gini_weight"],
+            "wear_gini_kv": w["reuse-on"]["wear_gini_kv"],
+        }
     comp = results.get("components")
     if comp:
         h["components"] = {
@@ -659,16 +775,21 @@ def tenant_reuse_bench() -> dict:
 
 def main(argv=None) -> dict:
     p = argparse.ArgumentParser(description="serving-engine benchmarks")
-    p.add_argument("--parts", default="1,2,3,4,5,6",
+    p.add_argument("--parts", default="1,2,3,4,5,6,7",
                    help="comma-separated parts to run: 1 tenant reuse, "
                         "2 paged-vs-slot, 3 install overlap, 4 chunked "
-                        "prefill, 5 prefix cache, 6 component breakdown")
+                        "prefill, 5 prefix cache, 6 component breakdown, "
+                        "7 wear & write energy")
     p.add_argument("--out", default=_DEFAULT_OUT,
                    help="path for the BENCH_serving.json headline dump "
                         "('' disables)")
     p.add_argument("--trace-out", default="",
                    help="part 6: also write the deterministic virtual-clock "
                         "Chrome trace to this path")
+    p.add_argument("--wear-json", default="",
+                   help="part 7: also write the reuse-on arm's per-plane "
+                        "wear map (writes/flips/pulses per slot and page) "
+                        "to this path")
     args = p.parse_args(argv)
     parts = sorted({int(x) for x in args.parts.split(",") if x.strip()})
 
@@ -685,6 +806,8 @@ def main(argv=None) -> dict:
         results["prefix_cache"] = prefix_cache_bench()
     if 6 in parts:
         results["components"] = component_breakdown(args.trace_out)
+    if 7 in parts:
+        results["wear"] = wear_energy_bench(args.wear_json)
     if args.out:
         _write_bench_json(args.out, _headlines(results))
     return results

@@ -11,6 +11,10 @@
 from __future__ import annotations
 
 import argparse
+import atexit
+import json
+import signal
+import sys
 import time
 
 import jax
@@ -80,6 +84,40 @@ def _run_engine(args) -> None:
         bucket_growth=args.bucket_growth,
         staging_growth=args.staging_growth)
 
+    # Artifact flush runs exactly once, whether the run completes, the
+    # user hits Ctrl-C (KeyboardInterrupt unwinds to interpreter exit →
+    # atexit), or the process is SIGTERMed (handler turns it into a normal
+    # exit so atexit still fires) — a half-hour serving run killed early
+    # still leaves its trace, metrics, and wear map on disk.
+    done = {"flushed": False}
+
+    def flush() -> None:
+        if done["flushed"]:
+            return
+        done["flushed"] = True
+        if args.trace_out:
+            tracer.export_chrome_trace(args.trace_out)
+            print(f"wrote Chrome trace ({len(tracer.events)} events) to "
+                  f"{args.trace_out} — load in chrome://tracing or "
+                  "https://ui.perfetto.dev")
+        if args.metrics_json:
+            doc = {"summary": _json_safe(eng.summary()),
+                   "metrics": _json_safe(eng.metrics.registry.as_dict())}
+            with open(args.metrics_json, "w") as f:
+                json.dump(doc, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"wrote metrics registry + summary to {args.metrics_json}")
+        if args.wear_json:
+            with open(args.wear_json, "w") as f:
+                json.dump(eng.wear.as_json(), f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"wrote wear map ({len(eng.wear.planes)} planes) to "
+                  f"{args.wear_json}")
+
+    if args.trace_out or args.metrics_json or args.wear_json:
+        atexit.register(flush)
+        signal.signal(signal.SIGTERM, lambda signum, frame: sys.exit(1))
+
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         model = tenants[i % len(tenants)].name
@@ -91,19 +129,7 @@ def _run_engine(args) -> None:
     print(f"engine: {args.requests} requests across {len(tenants)} models, "
           f"{args.kv_slots} KV slots each, weight arena {weight_slots} slots")
     print(format_summary(summary))
-    if args.trace_out:
-        tracer.export_chrome_trace(args.trace_out)
-        print(f"wrote Chrome trace ({len(tracer.events)} events) to "
-              f"{args.trace_out} — load in chrome://tracing or "
-              "https://ui.perfetto.dev")
-    if args.metrics_json:
-        import json
-        doc = {"summary": _json_safe(summary),
-               "metrics": _json_safe(eng.metrics.registry.as_dict())}
-        with open(args.metrics_json, "w") as f:
-            json.dump(doc, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"wrote metrics registry + summary to {args.metrics_json}")
+    flush()
 
 
 def main() -> None:
@@ -179,6 +205,11 @@ def main() -> None:
                    help="engine: dump the final summary and the typed "
                         "metrics registry (counters/gauges/histograms) as "
                         "JSON to this path")
+    p.add_argument("--wear-json", type=str, default="",
+                   help="engine: dump the per-plane wear map (write / "
+                        "cell-flip / pulse counts per weight slot and KV "
+                        "page, Gini, hottest-N, histogram) as JSON to this "
+                        "path; artifacts also flush on Ctrl-C/SIGTERM")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

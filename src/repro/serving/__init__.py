@@ -18,6 +18,7 @@ from repro.serving.residency import InstallPipeline, WeightResidencyManager
 from repro.serving.sampling import request_key, sample_token
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
 from repro.serving.tracing import NULL_TRACER, NullTracer, Tracer
+from repro.serving.wear import WearMap, WearPlane, gini_coefficient
 from repro.streaming.plan import InstallCostModel
 
 __all__ = [
@@ -30,4 +31,5 @@ __all__ = [
     "WeightResidencyManager", "SchedulerConfig", "StepScheduler",
     "drive_simulated", "request_key", "sample_token",
     "PrefillProgress", "bucket_for", "bucket_ladder",
+    "WearMap", "WearPlane", "gini_coefficient",
 ]

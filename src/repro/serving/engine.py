@@ -78,6 +78,8 @@ from repro.serving.residency import InstallPipeline, WeightResidencyManager
 from repro.serving.sampling import request_key, sample_token
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
 from repro.serving.tracing import NULL_TRACER, NullTracer, Tracer
+from repro.serving.wear import WearMap
+from repro.sim.energy import EnergyModel
 from repro.streaming.plan import InstallCostModel
 
 _log = logging.getLogger(__name__)
@@ -130,7 +132,8 @@ class ServingEngine:
                  bucket_growth: float = 2.0,
                  bucket_min: int = 8,
                  staging_growth: float = 2.0,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 energy_model: Optional[EnergyModel] = None):
         if not models:
             raise ValueError("need at least one tenant model")
         names = [m.name for m in models]
@@ -176,6 +179,23 @@ class ServingEngine:
         self.scheduler = StepScheduler(sched)
         self.scheduler.tracer = self.tracer
         self.metrics = EngineMetrics()
+
+        # Wear telemetry: one WearPlane per physical write plane — the
+        # weight arena's slots and each paged tenant's KV page pool —
+        # injected into the leaf modules like the tracer, and priced in
+        # joules through the energy model by `_wear_stats()`.
+        self.energy_model = energy_model or EnergyModel()
+        self.wear = WearMap()
+        self.residency.wear = self.wear.add_plane(
+            "weight", self.residency.arena_slots)
+        self.residency.flip_hist = self.metrics.registry.histogram(
+            "install_cell_flips")
+        for name, arena in self.arenas.items():
+            if isinstance(arena, PagedKVArena):
+                # first=1: device page 0 is the scratch page and never
+                # takes an accounted write
+                arena.wear = self.wear.add_plane(
+                    f"kv:{name}", arena.allocator.n_pages, first=1)
         self.requests: Dict[int, Request] = {}
         self._clock = clock
         self._next_rid = 0
@@ -784,6 +804,17 @@ class ServingEngine:
         if self.tracer.enabled:
             self.tracer.counter("kv_used_pages", kv_used)
             self.tracer.counter("queue_depth", self.scheduler.queue_depth)
+            # wear telemetry tracks: cumulative flips, current wear spread,
+            # pool headroom, and install backlog — per-step counter series
+            # in the Chrome trace (chrome://tracing renders them as tracks)
+            self.tracer.counter("install_flips",
+                                self.residency.stats.cell_flips)
+            self.tracer.counter("wear_gini_weight",
+                                round(self.residency.wear.gini("flips"), 4))
+            self.tracer.counter("kv_free_pages", kv_total - kv_used)
+            self.tracer.counter("install_queue_depth",
+                                self.pipeline.queue_depth
+                                if self.pipeline is not None else 0)
         self.metrics.record_step(StepRecord(
             t=now,
             n_active=sum(len(a.active_slots()) for a in self.arenas.values()),
@@ -842,7 +873,26 @@ class ServingEngine:
             residency=self.residency.stats.as_dict(),
             rejected=self.scheduler.rejected,
             paging=self._paging_stats(),
-            prefill_cache=prefill_cache_info() if self._chunk > 0 else None)
+            prefill_cache=prefill_cache_info() if self._chunk > 0 else None,
+            wear=self._wear_stats())
+
+    def _wear_stats(self) -> Dict[str, float]:
+        """Write energy and wear spread: install pulses and KV page bytes
+        priced through the energy model, Gini coefficients per plane
+        family.  `wear_gini_kv` only appears once a paged tenant exists —
+        a slot-arena engine has no KV write plane to speak of."""
+        em = self.energy_model
+        kv_bytes = sum(a.kv_bytes_written for a in self.arenas.values()
+                       if isinstance(a, PagedKVArena))
+        out = {
+            "install_energy_j": em.weight_write_j(
+                self.residency.stats.write_pulses),
+            "kv_write_energy_j": em.kv_write_j(kv_bytes),
+            "wear_gini_weight": self.residency.wear.gini("flips"),
+        }
+        if any(name.startswith("kv:") for name in self.wear.planes):
+            out["wear_gini_kv"] = self.wear.gini(prefix="kv:")
+        return out
 
     def _paging_stats(self) -> Optional[Dict[str, float]]:
         """Aggregate paged-arena stats across tenants (None when every

@@ -265,7 +265,8 @@ class EngineMetrics:
                 residency: Optional[Dict[str, float]] = None,
                 rejected: int = 0,
                 paging: Optional[Dict[str, float]] = None,
-                prefill_cache: Optional[Dict[str, int]] = None
+                prefill_cache: Optional[Dict[str, int]] = None,
+                wear: Optional[Dict[str, float]] = None
                 ) -> Dict[str, float]:
         # Histograms are fed by record_finish with exactly the non-None
         # per-request stats, so quantiles match the legacy list-comp path.
@@ -344,6 +345,10 @@ class EngineMetrics:
                 float(np.mean(cached)) if cached else 0.0)
             out["prefix_cached_pages_max"] = (
                 float(max(cached)) if cached else 0.0)
+        if wear:
+            # engine._wear_stats(): install/KV write energy priced through
+            # the EnergyModel plus the WearMap spread coefficients
+            out.update(wear)
         return out
 
 
@@ -402,4 +407,16 @@ def format_summary(s: Dict[str, float]) -> str:
             f"hidden under decode ({hidden/work:.0%}); "
             f"worst inter-token gap p50/p95 "
             f"{s['itl_max_p50_s']*1e3:.1f}/{s['itl_max_p95_s']*1e3:.1f} ms")
+    if s.get("install_write_pulses", 0) or s.get("kv_page_writes", 0):
+        line = (
+            f"wear: installs {s.get('install_energy_j', 0.0)*1e3:.2f} mJ "
+            f"({int(s.get('install_cell_flips', 0))} cell flips, "
+            f"{int(s.get('install_write_pulses', 0))} pulses), "
+            f"KV {s.get('kv_write_energy_j', 0.0)*1e3:.2f} mJ "
+            f"({int(s.get('kv_page_writes', 0))} page writes, "
+            f"{int(s.get('kv_page_writes_avoided', 0))} avoided); "
+            f"gini weight {s.get('wear_gini_weight', 0.0):.3f}")
+        if "wear_gini_kv" in s:
+            line += f", kv {s['wear_gini_kv']:.3f}"
+        lines.append(line)
     return "\n".join(lines)

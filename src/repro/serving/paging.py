@@ -416,6 +416,10 @@ class PagedKVArena:
     # structured-event sink (shared with self.allocator); the engine
     # swaps in its Tracer, standalone use keeps the no-op
     tracer = NULL_TRACER
+    # wear-telemetry sink, injected like the tracer: the engine's
+    # WearPlane over this pool's page ids (1..n_pages; the scratch page 0
+    # never takes an accounted write).  Standalone use records nothing.
+    wear = None
 
     def __init__(self, cfg: ModelConfig, n_rows: int, n_pages: int,
                  page_size: int, *, prefix_cache: bool = False,
@@ -439,6 +443,20 @@ class PagedKVArena:
             max_cached=(prefix_cache_pages or None) if prefix_cache
             else None)
         self.caches = init_page_pool(cfg, n_pages + 1, page_size)
+        # Device bytes one logical page write programs: a page write
+        # scatters this page's slice of EVERY pool leaf (all layers — see
+        # _cached_page_write), so per-page bytes = per-leaf page-axis slice
+        # summed across leaves.  Feeds the kv write-energy conversion.
+        self.page_bytes = int(sum(
+            (int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize)
+            // (n_pages + 1)
+            for leaf in jax.tree.leaves(self.caches)))
+        # write-side accounting: physical page programs (prefill scatter,
+        # staged install, COW copies) and the programs retained-page /
+        # live-prefix sharing avoided (shared pages an install skipped)
+        self.kv_page_writes = 0
+        self.kv_bytes_written = 0
+        self.kv_page_writes_avoided = 0
         self.owner: List[Optional[int]] = [None] * n_rows
         self.pos = np.zeros(n_rows, np.int32)
         self.last_token = np.zeros(n_rows, np.int32)
@@ -532,6 +550,14 @@ class PagedKVArena:
         return rid
 
     # ------------------------------------------------------------ caches
+    def _note_page_write(self, page: int) -> None:
+        """One physical page programmed (prefill scatter, staged install,
+        or COW copy) — the KV-plane analogue of a weight install."""
+        self.kv_page_writes += 1
+        self.kv_bytes_written += self.page_bytes
+        if self.wear is not None:
+            self.wear.record(page)
+
     def install(self, row: int, one_caches: Any, first_token: int,
                 tokens: Tuple[int, ...]) -> None:
         """Scatter a freshly prefilled batch-1 cache into this row's
@@ -539,9 +565,11 @@ class PagedKVArena:
         publish the pages for future sharing, and arm decode state."""
         rid = self.owner[row]
         table = self.allocator.tables[rid]
+        self.kv_page_writes_avoided += self._n_shared[rid]
         for i in range(self._n_shared[rid], len(table)):
             self.caches = self._write(self.caches, one_caches,
                                       jnp.int32(i), jnp.int32(table[i]))
+            self._note_page_write(table[i])
         self.allocator.register(rid, tuple(tokens))
         self.pos[row] = len(tokens)
         self.last_token[row] = first_token
@@ -603,9 +631,11 @@ class PagedKVArena:
         table = self.allocator.tables[rid]
         assert len(table) == self.blocks_for(len(tokens)), (
             "finish_stage before the table covered the prompt")
+        self.kv_page_writes_avoided += self._n_shared[rid]
         for i in range(self._n_shared[rid], len(table)):
             self.caches = self._write(self.caches, staging,
                                       jnp.int32(i), jnp.int32(table[i]))
+            self._note_page_write(table[i])
         self.allocator.register(rid, tuple(tokens))
         self.tables_np[row, :] = 0
         self.tables_np[row, :len(table)] = table
@@ -635,6 +665,7 @@ class PagedKVArena:
             self.caches = self._copy(self.caches, jnp.int32(src),
                                      jnp.int32(dst))
             self.tables_np[row, block] = dst
+            self._note_page_write(dst)
         return True
 
     def decode_inputs(self):
@@ -659,4 +690,7 @@ class PagedKVArena:
             "kv_cow_copies": float(a.cow_copies),
             "kv_prefix_cached_pages": float(a.tree.n_cached),
             "kv_prefix_evictions": float(a.tree.evictions),
+            "kv_page_writes": float(self.kv_page_writes),
+            "kv_bytes_written": float(self.kv_bytes_written),
+            "kv_page_writes_avoided": float(self.kv_page_writes_avoided),
         }

@@ -50,6 +50,10 @@ class ResidencyStats:
     cold_installs: int = 0
     cross_tenant_installs: int = 0
     skips: float = 0.0
+    # device-side write activity (wear/energy telemetry): cells actually
+    # programmed and incremental pulses issued, equal-skip aware under reuse
+    cell_flips: int = 0
+    write_pulses: int = 0
 
     @property
     def mean_skip(self) -> float:
@@ -71,6 +75,8 @@ class ResidencyStats:
             "cross_tenant_installs": float(self.cross_tenant_installs),
             "install_mean_skip": self.mean_skip,
             "install_savings": self.savings,
+            "install_cell_flips": float(self.cell_flips),
+            "install_write_pulses": float(self.write_pulses),
         }
 
 
@@ -78,6 +84,12 @@ class WeightResidencyManager:
     # structured-event sink for committed installs; the engine swaps in
     # its shared Tracer, standalone use keeps the no-op
     tracer = NULL_TRACER
+    # wear telemetry sinks, injected like the tracer: `wear` is the weight
+    # arena's WearPlane (per-slot writes/flips/pulses, keyed by layer
+    # group), `flip_hist` a MetricsRegistry histogram of per-install flips;
+    # standalone use records nothing
+    wear = None
+    flip_hist = None
 
     def __init__(self, models: Dict[str, Tuple[Any, ModelConfig]],
                  arena_slots: int, *, reuse: bool = True):
@@ -94,6 +106,9 @@ class WeightResidencyManager:
                 offset_groups.append(i)   # align tenants layer-by-layer
                 self.model_of.append(name)
             self.layer_ids[name] = ids
+        # layer-group label per store layer (the §V-C offset group): the
+        # wear map's slot×group dimension keys on it
+        self.group_of: List[int] = offset_groups
         # reuse=False is the paper's baseline: every cell programmed on every
         # install (raw stream, no centering).  reuse=True is §V-C applied
         # across tenants: equal-cell skipping + pooled per-layer-group
@@ -115,7 +130,8 @@ class WeightResidencyManager:
         # Codes are immutable after store construction, so the (occupant,
         # incoming) pair cost is memoizable — tenant turns repeat the same
         # pairs every switch.
-        self._cost_cache: Dict[Tuple[Optional[int], int], Tuple[int, float]] = {}
+        self._cost_cache: Dict[Tuple[Optional[int], int],
+                               Tuple[int, float, int, int]] = {}
 
     # ---------------------------------------------------------- capacity
     def layers_of(self, models: Iterable[str]) -> int:
@@ -142,29 +158,47 @@ class WeightResidencyManager:
                 self._stamp[slot] = step
 
     # ----------------------------------------------------------- install
-    def _cost(self, occupant: Optional[int], layer: int) -> Tuple[int, float]:
-        """Wire bytes to install `layer` over `occupant`.  The installer
-        ships whichever stream is cheaper — the entropy-coded cell delta or
-        the raw codes — so a dissimilar occupant never costs MORE than a
-        cold install (delta entropy can exceed 2 bits/cell between
-        unrelated tenants).  With reuse off every install ships raw."""
-        raw = self.store.layers[layer].codes.size
-        if not self.reuse:
-            return raw, 0.0
+    def _cost(self, occupant: Optional[int], layer: int
+              ) -> Tuple[int, float, int, int]:
+        """(wire bytes, skip ratio, cells flipped, programming pulses) to
+        install `layer` over `occupant`.  The installer ships whichever
+        stream is cheaper — the entropy-coded cell delta or the raw codes —
+        so a dissimilar occupant never costs MORE than a cold install
+        (delta entropy can exceed 2 bits/cell between unrelated tenants);
+        the device-side flip/pulse counts depend only on resident-vs-
+        incoming cells, not on which stream shipped.  With reuse off every
+        install ships raw and the programmer rewrites every cell."""
         key = (occupant, layer)
-        if key not in self._cost_cache:
-            wire, skip = self.store.install_cost(occupant, layer)
-            self._cost_cache[key] = (raw, 0.0) if wire >= raw else (wire, skip)
-        return self._cost_cache[key]
+        got = self._cost_cache.get(key)
+        if got is None:
+            raw = self.store.layers[layer].codes.size
+            flips, pulses = self.store.install_flips(
+                occupant, layer, skip_equal=self.reuse)
+            if not self.reuse:
+                got = (raw, 0.0, flips, pulses)
+            else:
+                wire, skip = self.store.install_cost(occupant, layer)
+                if wire >= raw:
+                    wire, skip = raw, 0.0
+                got = (wire, skip, flips, pulses)
+            self._cost_cache[key] = got
+        return got
 
     def _install(self, layer: int, slot: int, step: int) -> int:
         occupant = self.slots[slot]
-        wire, skip = self._cost(occupant, layer)
+        wire, skip, flips, pulses = self._cost(occupant, layer)
         raw = self.store.layers[layer].codes.size
         self.stats.raw_bytes += raw
         self.stats.wire_bytes += wire
         self.stats.installs += 1
         self.stats.skips += skip
+        self.stats.cell_flips += flips
+        self.stats.write_pulses += pulses
+        if self.wear is not None:
+            self.wear.record(slot, flips=flips, pulses=pulses,
+                             group=self.group_of[layer])
+        if self.flip_hist is not None:
+            self.flip_hist.observe(flips)
         if occupant is None:
             self.stats.cold_installs += 1
         else:
@@ -213,7 +247,7 @@ class WeightResidencyManager:
             best = None
             for layer in missing:
                 for slot in candidates:
-                    wire, _ = self._cost(self.slots[slot], layer)
+                    wire = self._cost(self.slots[slot], layer)[0]
                     # ties (e.g. reuse off: everything raw) break LRU-first
                     key = (wire, self._stamp[slot])
                     if best is None or key < best[0]:
@@ -265,6 +299,12 @@ class InstallPipeline:
     def idle(self) -> bool:
         return self.target is None
 
+    @property
+    def queue_depth(self) -> int:
+        """Layers still queued for the current target, the in-flight
+        partial install included — the live install-backlog counter."""
+        return len(self._missing) + (self._cur is not None)
+
     def begin(self, model: str, step: int) -> None:
         """(Re)target the pipeline.  Retargeting drops any in-flight
         partial install — its ticks are sunk cost, counted in `aborts`."""
@@ -295,7 +335,7 @@ class InstallPipeline:
             if not self._evictable(slot, pinned):
                 continue
             for layer in self._missing:
-                wire, _ = self.res._cost(self.res.slots[slot], layer)
+                wire = self.res._cost(self.res.slots[slot], layer)[0]
                 key = (wire, layer, self.res._stamp[slot])
                 if best is None or key < best[0]:
                     best = (key, layer, slot)

@@ -44,6 +44,23 @@ class EnergyModel:
     tpu_sram_j_per_byte: float = 2.4e-12  # 4.5 MB unified buffer access
     tpu_leak_w: float = 0.42             # buffers + 64×64 MAC array + logic
 
+    # Expected incremental pulses to program one 2-bit cell whose target
+    # level is uniform in {0..3} from an erased (level-0) cell: E|Δ| = 1.5.
+    # The KV plane has no per-cell delta tracking (pages are programmed
+    # whole), so byte traffic converts to pulses through this expectation.
+    kv_pulses_per_cell: float = 1.5
+
     def aras_static_w(self, num_apus: int, gbuffer_leak_w: float) -> float:
         """Chip static power given the currently-active Gbuffer bank set."""
         return self.chip_other_leak_w + num_apus * self.apu_leak_w + gbuffer_leak_w
+
+    def weight_write_j(self, pulses: float) -> float:
+        """Energy of `pulses` incremental SET/RESET programming pulses —
+        the serving engine's §V-C install accounting priced in joules."""
+        return float(pulses) * self.write_pulse_j
+
+    def kv_write_j(self, n_bytes: float) -> float:
+        """Energy to program `n_bytes` of KV-page traffic into 2-bit cells
+        (4 cells per byte — `repro.xbar.cells.CELLS_PER_WEIGHT`) at the
+        expected erased-cell programming cost per cell."""
+        return float(n_bytes) * 4 * self.kv_pulses_per_cell * self.write_pulse_j

@@ -27,6 +27,31 @@ def _cells(codes: np.ndarray) -> np.ndarray:
     return (c >> shifts) & 0x3
 
 
+def flip_counts(old: Optional[np.ndarray], new: np.ndarray, *,
+                skip_equal: bool = True) -> Tuple[int, int]:
+    """(cells programmed, programming pulses) to put `new` codes into a
+    region holding `old` (None = erased region: every cell at level 0; a
+    `new` longer than `old` programs its tail from erased too).
+
+    skip_equal=True is the §V-C device write: 2-bit planes whose level is
+    unchanged are skipped entirely (0 pulses), and a changed cell costs
+    |Δ level| incremental SET/RESET pulses (`repro.xbar.cells.pulse_count`,
+    the paper's Fig. 13 writing-activity metric).  skip_equal=False is the
+    baseline programmer: every cell is rewritten, an unchanged level still
+    costing its one write/verify pulse."""
+    cn = _cells(new)
+    if old is None or old.size == 0:
+        d = cn
+    else:
+        n = min(old.size, new.size)
+        d = cn.copy()
+        d[:n] -= _cells(old[:n])
+    d = np.abs(d)
+    if skip_equal:
+        return int(np.count_nonzero(d)), int(d.sum())
+    return int(d.size), int(np.maximum(d, 1).sum())
+
+
 def delta_bytes(old: np.ndarray, new: np.ndarray) -> Tuple[int, float]:
     """Bytes-on-wire for an entropy-coded cell-delta stream + skip ratio.
 
@@ -167,3 +192,17 @@ class QuantizedStore:
             return new.size, 0.0
         b, skip = delta_bytes(old[:n], new[:n])
         return b + (new.size - n), skip
+
+    def install_flips(self, resident: Optional[int], incoming: int, *,
+                      skip_equal: bool = True) -> Tuple[int, int]:
+        """(cells programmed, programming pulses) the DEVICE spends putting
+        layer `incoming` into a slot holding `resident` (None = cold slot,
+        programmed from erased).  This is the physical-write counterpart of
+        `install_cost` and is independent of the wire encoding: even when
+        the raw code stream ships (delta entropy exceeded 2 bits/cell), a
+        skip_equal programmer still read-verifies and skips equal 2-bit
+        planes.  skip_equal=False models the no-reuse baseline that
+        rewrites every cell."""
+        new = self.layers[incoming].codes
+        old = None if resident is None else self.layers[resident].codes
+        return flip_counts(old, new, skip_equal=skip_equal)

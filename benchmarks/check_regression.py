@@ -61,6 +61,14 @@ SPECS: Dict[str, Dict[str, Tuple[str, float]]] = {
         "kv_page_writes": ("lower", 0.10),
         "wear_gini_weight": ("lower", 0.15),
     },
+    # part 8: the wear-aware blend must keep flattening the weight
+    # plane's write spread, and the seeded 2% fault arm must keep
+    # surviving (floor, tolerance 0: fewer survivals means the sweep
+    # stopped exercising the degradation path)
+    "faults": {
+        "wear_gini_weight_on": ("lower", 0.15),
+        "faults_survived": ("higher", 0.0),
+    },
 }
 
 

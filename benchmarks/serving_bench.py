@@ -636,6 +636,111 @@ def wear_energy_bench(wear_json: str = "") -> dict:
     return out
 
 
+# --------------------- wear-aware placement & fault sweep (part 8)
+FAULT_SWEEP_RATES = (0.005, 0.01, 0.02)
+# seed chosen so the 2% arm faults at least one weight slot and one KV
+# page on this workload (the 0/0.5/1% arms may legitimately stay clean)
+FAULT_SEED = 100
+
+
+def _run_fault_arm(cfg, params_a, params_b, jobs, *, wear_aware=0.0,
+                   fault_rate=0.0, fault_seed=0, spare_slots=1):
+    """One placement/fault arm over the part-7 workload shape: paged KV
+    + prefix cache, instant installs on a virtual clock.  Neither knob
+    may move the decoded tokens — wear-aware placement only re-ranks
+    eviction victims and free pages (installs are bookkeeping; decode
+    runs on full-precision params), and a surviving fault remaps the
+    write to a healthy unit with identical contents.
+
+    `spare_slots=1` forces tenant swaps (the wear arms need traffic to
+    steer); the fault arms run with 3 — room for both tenants to decode
+    concurrently plus one retirement — so a weight-slot fault remaps to
+    a healthy slot instead of exhausting the arena.  Endurance headroom
+    is a provisioning decision: a stuck-at slot is capacity permanently
+    gone."""
+    clock = VirtualClock()
+    kv = dict(kv_slots=4, max_seq=64, kv_layout="paged",
+              page_size=PAGE_SIZE, n_pages=WEAR_N_PAGES, prefix_cache=True)
+    eng = ServingEngine(
+        [EngineModel("base", params_a, cfg, **kv),
+         EngineModel("variant", params_b, cfg, **kv)],
+        weight_arena_slots=cfg.n_layers + spare_slots,
+        reuse=True,
+        sched=SchedulerConfig(max_prefill_per_step=4,
+                              model_turn_steps=TURN_STEPS),
+        clock=clock, wear_aware=wear_aware,
+        fault_rate=fault_rate, fault_seed=fault_seed)
+    summary = drive_simulated(eng, clock, jobs, dt=WEAR_STEP_DT)
+    summary["_generated"] = {r.rid: list(r.generated)
+                             for r in eng.requests.values()}
+    return eng, summary
+
+
+def fault_wear_bench() -> dict:
+    print("\n== Wear-aware placement & stuck-at fault sweep "
+          "(virtual clock, 2 tenants, paged KV) ==")
+    cfg = get_config("gemma-7b", smoke=True)
+    params_a = _checkpointify(init_params(jax.random.PRNGKey(0), cfg))
+    params_b = perturbed_variant(params_a)
+    jobs = _wear_workload(cfg)
+
+    out = {}
+    # -- wear-aware placement: identical schedule, flatter write spread
+    for weight in (0.0, 1.0):
+        tag = "wear-on" if weight else "wear-off"
+        _, s = _run_fault_arm(cfg, params_a, params_b, jobs,
+                              wear_aware=weight)
+        out[tag] = s
+        csv_row(f"serving/faults-{tag}", s["wear_gini_weight"],
+                f"gini_kv={s['wear_gini_kv']:.3f};"
+                f"flips={int(s['install_cell_flips'])};"
+                f"installs={int(s['installs'])}")
+        print(f"-- {tag}:")
+        print(format_summary(s))
+    off, on = out["wear-off"], out["wear-on"]
+    assert on["_generated"] == off["_generated"], \
+        "wear-aware placement changed decoded tokens"
+    assert on["steps"] == off["steps"], \
+        "wear-aware placement changed the schedule"
+    assert on["wear_gini_weight"] < off["wear_gini_weight"], \
+        "wear blend must strictly flatten the weight plane's write spread"
+    print(f"-- same schedule ({int(on['steps'])} steps, token-for-token "
+          f"identical): weight-plane wear gini "
+          f"{off['wear_gini_weight']:.3f} -> {on['wear_gini_weight']:.3f} "
+          f"with the wear-aware victim/free-page blend on")
+
+    # -- fault sweep 0 -> 2%: token-equivalent with survivals logged.
+    # The sweep's own rate-0 arm is the baseline (same arena shape).
+    for rate in (0.0,) + FAULT_SWEEP_RATES:
+        tag = f"fault-{rate:g}"
+        _, s = _run_fault_arm(cfg, params_a, params_b, jobs,
+                              fault_rate=rate, fault_seed=FAULT_SEED,
+                              spare_slots=3)
+        out[tag] = s
+        assert s["requests_finished"] == len(jobs), \
+            f"rate {rate:g}: a request never finished"
+        assert s["_generated"] == out["fault-0"]["_generated"], \
+            f"rate {rate:g}: a surviving fault changed decoded tokens"
+        assert s["faults_survived"] == \
+            s["slots_retired"] + s["pages_retired"]
+        csv_row(f"serving/{tag}", s["faults_survived"],
+                f"slots_retired={int(s['slots_retired'])};"
+                f"pages_retired={int(s['pages_retired'])}")
+    assert out["fault-0"]["faults_survived"] == 0
+    top = out[f"fault-{FAULT_SWEEP_RATES[-1]:g}"]
+    assert top["faults_survived"] > 0, \
+        "sweep never injected a fault — seed/rate too conservative"
+    print(f"-- fault sweep 0 -> {FAULT_SWEEP_RATES[-1]:.1%} token-"
+          f"equivalent: " + ", ".join(
+              f"{r:.1%}: {int(out[f'fault-{r:g}']['faults_survived'])} "
+              f"survived ({int(out[f'fault-{r:g}']['slots_retired'])} "
+              f"slots, {int(out[f'fault-{r:g}']['pages_retired'])} pages "
+              f"retired)" for r in FAULT_SWEEP_RATES))
+    for s in out.values():
+        s.pop("_generated")
+    return out
+
+
 # ------------------------------------------------- headline persistence
 _DEFAULT_OUT = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -714,6 +819,17 @@ def _headlines(results: dict) -> dict:
             "wear_gini_weight": w["reuse-on"]["wear_gini_weight"],
             "wear_gini_kv": w["reuse-on"]["wear_gini_kv"],
         }
+    fl = results.get("faults")
+    if fl:
+        top = fl[f"fault-{FAULT_SWEEP_RATES[-1]:g}"]
+        h["faults"] = {
+            "wear_gini_weight_off": fl["wear-off"]["wear_gini_weight"],
+            "wear_gini_weight_on": fl["wear-on"]["wear_gini_weight"],
+            "faults_survived": top["faults_survived"],
+            "slots_retired": top["slots_retired"],
+            "pages_retired": top["pages_retired"],
+            "steps": fl["wear-on"]["steps"],
+        }
     comp = results.get("components")
     if comp:
         h["components"] = {
@@ -775,11 +891,12 @@ def tenant_reuse_bench() -> dict:
 
 def main(argv=None) -> dict:
     p = argparse.ArgumentParser(description="serving-engine benchmarks")
-    p.add_argument("--parts", default="1,2,3,4,5,6,7",
+    p.add_argument("--parts", default="1,2,3,4,5,6,7,8",
                    help="comma-separated parts to run: 1 tenant reuse, "
                         "2 paged-vs-slot, 3 install overlap, 4 chunked "
                         "prefill, 5 prefix cache, 6 component breakdown, "
-                        "7 wear & write energy")
+                        "7 wear & write energy, 8 wear-aware placement "
+                        "& fault sweep")
     p.add_argument("--out", default=_DEFAULT_OUT,
                    help="path for the BENCH_serving.json headline dump "
                         "('' disables)")
@@ -808,6 +925,8 @@ def main(argv=None) -> dict:
         results["components"] = component_breakdown(args.trace_out)
     if 7 in parts:
         results["wear"] = wear_energy_bench(args.wear_json)
+    if 8 in parts:
+        results["faults"] = fault_wear_bench()
     if args.out:
         _write_bench_json(args.out, _headlines(results))
     return results

@@ -82,7 +82,10 @@ def _run_engine(args) -> None:
             bytes_per_tick=args.install_bytes_per_tick),
         prefill_chunk=args.prefill_chunk,
         bucket_growth=args.bucket_growth,
-        staging_growth=args.staging_growth)
+        staging_growth=args.staging_growth,
+        wear_aware=args.wear_aware,
+        fault_rate=args.fault_rate,
+        fault_seed=args.fault_seed)
 
     # Artifact flush runs exactly once, whether the run completes, the
     # user hits Ctrl-C (KeyboardInterrupt unwinds to interpreter exit →
@@ -205,6 +208,21 @@ def main() -> None:
                    help="engine: dump the final summary and the typed "
                         "metrics registry (counters/gauges/histograms) as "
                         "JSON to this path")
+    p.add_argument("--wear-aware", type=float, nargs="?", const=1.0,
+                   default=0.0, metavar="WEIGHT",
+                   help="engine: blend install victim picking with per-slot "
+                        "write pressure and hand out the coldest free KV "
+                        "page first (Hamun-style wear leveling); optional "
+                        "value is the blend weight (bare flag = 1.0, "
+                        "0 = off, today's placement bit-for-bit)")
+    p.add_argument("--fault-rate", type=float, default=0.0,
+                   help="engine: seeded stuck-at fault probability per "
+                        "physical write (weight slots + KV pages); faulted "
+                        "units are retired and remapped with token "
+                        "equivalence preserved (0 = no injection)")
+    p.add_argument("--fault-seed", type=int, default=0,
+                   help="engine: seed for the deterministic fault stream "
+                        "(same seed + same schedule = same faults)")
     p.add_argument("--wear-json", type=str, default="",
                    help="engine: dump the per-plane wear map (write / "
                         "cell-flip / pulse counts per weight slot and KV "

@@ -6,6 +6,7 @@ tick-budgeted install pipeline that overlaps tenant switches with decode,
 and an engine metrics surface (drivable on a deterministic VirtualClock)."""
 from repro.serving.bucketing import PrefillProgress, bucket_for, bucket_ladder
 from repro.serving.engine import EngineModel, ServingEngine
+from repro.serving.faults import FaultModel
 from repro.serving.harness import drive_simulated
 from repro.serving.kv_arena import KVArena
 from repro.serving.metrics import (Counter, EngineMetrics, Gauge, Histogram,
@@ -31,5 +32,5 @@ __all__ = [
     "WeightResidencyManager", "SchedulerConfig", "StepScheduler",
     "drive_simulated", "request_key", "sample_token",
     "PrefillProgress", "bucket_for", "bucket_ladder",
-    "WearMap", "WearPlane", "gini_coefficient",
+    "WearMap", "WearPlane", "gini_coefficient", "FaultModel",
 ]

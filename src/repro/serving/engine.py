@@ -22,16 +22,18 @@ on a fixed device budget:
     a geometric bucket ladder so distinct prefill jit traces stay bounded
     by the ladder size instead of growing with every new prompt length.
     Chunked and monolithic prefill are token-for-token identical on both
-    KV layouts (tests/test_chunked_prefill.py) — except xLSTM tenants,
-    whose chunkwise-parallel mLSTM groups floats differently per chunking;
+    KV layouts (tests/test_chunked_prefill.py); mLSTM tenants are rejected
+    at construction (chunkwise-parallel mLSTM is not chunking-invariant —
+    the engine refuses rather than serving silently divergent tokens);
   * paged tenants with `prefix_cache=True` keep a radix-tree prefix cache
     (`serving/prefix_cache.py`): finished requests donate their
     prompt+generated pages into the tree (LRU-evicted on demand) and a
-    later request over the shared prefix *skips* every prefill chunk the
-    cached pages cover — the staging carry-in is seeded from the pool at
-    the hit boundary, so warm prefill is token-for-token identical to
-    cold while recomputing none of the covered chunks (ARAS §V-C
-    write-avoidance applied to the KV plane);
+    later request over the shared prefix *skips* straight to the exact
+    covered token (capped at len-1 so the final chunk still produces real
+    logits) — the staging carry-in is seeded from the pool at the hit
+    boundary, so warm prefill is token-for-token identical to cold while
+    recomputing none of the covered tokens (ARAS §V-C write-avoidance
+    applied to the KV plane);
   * a `WeightResidencyManager` decides which tenant's quantized layer codes
     occupy the device weight slots, delta-installing on tenant switches and
     reporting wire bytes saved by §V-C cross-tenant reuse;
@@ -68,8 +70,10 @@ from repro.launch.steps import (cached_chunk_prefill_step,
                                 cached_stage_quantize, prefill_cache_info)
 from repro.nn.config import ModelConfig
 from repro.nn.model import init_cache
+from repro.nn.transformer import layer_kind
 from repro.serving.bucketing import (PrefillProgress, bucket_for,
                                      bucket_ladder)
+from repro.serving.faults import FaultModel
 from repro.serving.kv_arena import KVArena
 from repro.serving.metrics import EngineMetrics, StepRecord
 from repro.serving.paging import PagedKVArena
@@ -133,7 +137,10 @@ class ServingEngine:
                  bucket_min: int = 8,
                  staging_growth: float = 2.0,
                  tracer: Optional[Tracer] = None,
-                 energy_model: Optional[EnergyModel] = None):
+                 energy_model: Optional[EnergyModel] = None,
+                 wear_aware: float = 0.0,
+                 fault_rate: float = 0.0,
+                 fault_seed: int = 0):
         if not models:
             raise ValueError("need at least one tenant model")
         names = [m.name for m in models]
@@ -142,6 +149,20 @@ class ServingEngine:
         for m in models:
             if m.cfg.is_encoder or m.cfg.input_mode != "tokens":
                 raise ValueError(f"{m.name}: engine serves causal token LMs")
+            if prefill_chunk and any(
+                    layer_kind(m.cfg, i) == "mlstm"
+                    for i in range(m.cfg.n_layers)):
+                # the chunkwise-parallel mLSTM groups floats per chunk
+                # boundary, so chunked prefill diverges token-for-token
+                # from monolithic — refuse loudly instead of serving
+                # silently different tokens (per-token sLSTM/mamba scans
+                # are chunking-exact and stay allowed)
+                raise ValueError(
+                    f"{m.name}: prefill_chunk > 0 is not supported for "
+                    "mLSTM tenants — chunkwise-parallel mLSTM prefill is "
+                    "not chunking-invariant (float regrouping at chunk "
+                    "boundaries changes tokens); serve this tenant with "
+                    "prefill_chunk=0")
         self.models: Dict[str, EngineModel] = {m.name: m for m in models}
         self.arenas: Dict[str, Any] = {}
         self._decode: Dict[str, Callable] = {}
@@ -196,6 +217,31 @@ class ServingEngine:
                 # takes an accounted write
                 arena.wear = self.wear.add_plane(
                     f"kv:{name}", arena.allocator.n_pages, first=1)
+
+        # Hamun policy half: act on the wear the planes record.
+        # wear_aware > 0 (True coerces to 1.0) blends the install victim
+        # picker's delta cost with per-slot write pressure and switches
+        # page allocation to coldest-page-first; 0/False keeps today's
+        # FIFO + pure min-delta behavior bit-for-bit.  fault_rate > 0
+        # arms seeded stuck-at faults over both planes: a write that
+        # fails verify retires its slot/page for good and the engine
+        # remaps — faulted runs stay token-equivalent to fault-free.
+        self._wear_weight = float(wear_aware)
+        if self._wear_weight < 0:
+            raise ValueError("wear_aware must be >= 0 (a blend weight)")
+        if self._wear_weight > 0:
+            self.residency.wear_weight = self._wear_weight
+            for arena in self.arenas.values():
+                if isinstance(arena, PagedKVArena):
+                    arena.allocator.enable_wear_aware(arena.wear)
+        self.faults: Optional[FaultModel] = (
+            FaultModel(fault_rate, fault_seed) if fault_rate else None)
+        if self.faults is not None:
+            self.residency.faults = self.faults
+            for name, arena in self.arenas.items():
+                if isinstance(arena, PagedKVArena):
+                    arena.allocator.faults = self.faults
+                    arena.allocator.fault_plane = f"kv:{name}"
         self.requests: Dict[int, Request] = {}
         self._clock = clock
         self._next_rid = 0
@@ -514,8 +560,11 @@ class ServingEngine:
                 self._prefills[req.rid] = st
             if isinstance(arena, PagedKVArena) and arena.skip_ok:
                 covered = arena.covered_tokens(req.rid, len(prompt))
-                skip = (min(covered, len(prompt) - 1)
-                        // self._chunk) * self._chunk
+                # skip to the exact covered token (capped at len-1 so the
+                # final chunk produces real logits) — a sub-chunk resume
+                # start is fine: the chunk step slices from a dynamic
+                # start, and per-query attention is position-exact
+                skip = min(covered, len(prompt) - 1)
                 if skip > st.done:
                     # covers a resumed prefill too: pages donated since the
                     # preemption extend the hit past the completed chunks
@@ -544,6 +593,12 @@ class ServingEngine:
             padded = bucket_for(remaining, self._ladder)
         else:
             padded = remaining
+        # a sub-chunk prefix-cache skip can start the tail chunk at an
+        # unaligned position; clamp the padding so the staging write never
+        # spills past the cache (dynamic_update_slice would clamp the
+        # start and corrupt covered positions).  Aligned starts always
+        # satisfy start + padded <= staging_len, so this is a no-op there.
+        padded = min(padded, st.staging_len - start)
         buf = np.zeros((1, padded), np.int32)
         buf[0, :size] = st.tokens[start:start + size]
         if st.start_t is None:
@@ -892,6 +947,14 @@ class ServingEngine:
         }
         if any(name.startswith("kv:") for name in self.wear.planes):
             out["wear_gini_kv"] = self.wear.gini(prefix="kv:")
+        # fault-degradation counters: units retired after a stuck-at fault
+        # was survived (slots_retired rides in on the residency stats)
+        pages_retired = sum(
+            a.allocator.pages_retired for a in self.arenas.values()
+            if isinstance(a, PagedKVArena))
+        out["pages_retired"] = float(pages_retired)
+        out["faults_survived"] = float(
+            self.residency.stats.slots_retired + pages_retired)
         return out
 
     def _paging_stats(self) -> Optional[Dict[str, float]]:

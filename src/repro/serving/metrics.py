@@ -419,4 +419,9 @@ def format_summary(s: Dict[str, float]) -> str:
         if "wear_gini_kv" in s:
             line += f", kv {s['wear_gini_kv']:.3f}"
         lines.append(line)
+    if s.get("faults_survived", 0):
+        lines.append(
+            f"faults: {int(s['faults_survived'])} survived "
+            f"({int(s.get('slots_retired', 0))} slots, "
+            f"{int(s.get('pages_retired', 0))} pages retired)")
     return "\n".join(lines)

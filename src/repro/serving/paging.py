@@ -42,6 +42,7 @@ would otherwise fail — write-avoidance extended from the weight plane
 from __future__ import annotations
 
 import functools
+import heapq
 from collections import deque
 from typing import Any, Dict, FrozenSet, List, Optional, Tuple
 
@@ -64,6 +65,13 @@ class PageAllocator:
     # structured-event sink for eviction/COW/donation decisions; the
     # engine swaps in its shared Tracer, standalone use keeps the no-op
     tracer = NULL_TRACER
+    # stuck-at fault model (serving/faults.py) + the wear-plane name its
+    # checks key on, injected by the engine; None = fault-free allocation
+    faults = None
+    fault_plane = "kv"
+    # wear-plane over this pool's page ids, shared with the owning arena;
+    # enable_wear_aware() switches the free structure to coldest-first
+    wear = None
 
     def __init__(self, n_pages: int, page_size: int, *,
                  retain: bool = False, max_cached: Optional[int] = None):
@@ -72,7 +80,16 @@ class PageAllocator:
         self.n_pages = n_pages
         self.page_size = page_size
         self.retain = retain
-        self._free: deque = deque(range(1, n_pages + 1))
+        # FIFO free deque by default; enable_wear_aware() rebuilds it as a
+        # (writes, page) min-heap so allocation hands out the coldest page
+        # first — valid because pages only accrue writes while allocated,
+        # so a free page's wear never changes under it
+        self._free = deque(range(1, n_pages + 1))
+        self.wear_aware = False
+        # pages permanently pulled from service after a stuck-at fault —
+        # never re-issued (neither free nor referenced)
+        self.retired: set = set()
+        self.pages_retired = 0
         self.refcount = np.zeros(n_pages + 1, np.int32)
         self.tables: Dict[int, List[int]] = {}      # rid -> physical pages
         # prefix index + retention layer: radix tree over token-block
@@ -103,11 +120,54 @@ class PageAllocator:
         return max(-(-n_tokens // self.page_size), 1)
 
     # ---------------------------------------------------------- low level
-    def _alloc_page(self) -> int:
-        page = self._free.popleft()
-        self.refcount[page] = 1
-        self.pages_allocated += 1
-        return page
+    def enable_wear_aware(self, plane) -> None:
+        """Switch free-page ordering from FIFO to coldest-first, steered by
+        `plane` (the pool's WearPlane): the free structure becomes a
+        (writes, page) min-heap, so every allocation programs the least-
+        worn free page.  Ties break toward the lower page id, keeping the
+        order deterministic."""
+        self.wear = plane
+        self.wear_aware = True
+        heap = [(int(plane.writes[p - plane.first]), p) for p in self._free]
+        heapq.heapify(heap)
+        self._free = heap
+
+    def _free_push(self, page: int) -> None:
+        if self.wear_aware:
+            heapq.heappush(
+                self._free,
+                (int(self.wear.writes[page - self.wear.first]), page))
+        else:
+            self._free.append(page)
+
+    def _free_pop(self) -> int:
+        if self.wear_aware:
+            return heapq.heappop(self._free)[1]
+        return self._free.popleft()
+
+    def _take_page(self) -> Optional[int]:
+        """`_alloc_page` behind program-and-verify: pop free pages until one
+        takes the program cleanly; a page that faults is retired for good
+        (never re-issued), the free list is topped back up via LRU eviction
+        when retirement drains it, and None means no healthy page is left —
+        the caller unwinds with no side effects and degrades like any other
+        pool exhaustion (preempt, resume when pages free up)."""
+        while True:
+            if not self._free and not self.ensure_free(1):
+                return None
+            page = self._free_pop()
+            if (self.faults is not None
+                    and self.faults.check(self.fault_plane, page)):
+                self.retired.add(page)
+                self.pages_retired += 1
+                if self.wear is not None:
+                    self.wear.retire(page)
+                self.tracer.instant("page_retired", page=page,
+                                    plane=self.fault_plane)
+                continue
+            self.refcount[page] = 1
+            self.pages_allocated += 1
+            return page
 
     def free_page(self, page: int) -> None:
         """Drop one reference; the page returns to the free list (contents
@@ -120,7 +180,7 @@ class PageAllocator:
         self.refcount[page] -= 1
         if self.refcount[page] == 0:
             self.tree.drop_page(page, self.free_page)
-            self._free.append(page)
+            self._free_push(page)
         elif self.refcount[page] == 1:
             # last external holder left a retained page: it just became
             # solely tree-held, i.e. evictable — tell the tree's count
@@ -201,9 +261,18 @@ class PageAllocator:
             self.shared_hits -= len(shared)
             return None
         self.ensure_free(need)
-        table = list(shared)
+        fresh: List[int] = []
         for _ in range(need):
-            table.append(self._alloc_page())
+            page = self._take_page()
+            if page is None:         # faults drained the pool mid-build
+                for p in fresh:
+                    self.free_page(p)
+                for p in shared:
+                    self.free_page(p)
+                self.shared_hits -= len(shared)
+                return None
+            fresh.append(page)
+        table = list(shared) + fresh
         self.tables[rid] = table
         return table, len(shared)
 
@@ -237,8 +306,15 @@ class PageAllocator:
         if need > self.n_free + self.evictable_pages():
             return False
         self.ensure_free(need)
+        added: List[int] = []
         for _ in range(need):
-            self.tables[rid].append(self._alloc_page())
+            page = self._take_page()
+            if page is None:         # faults drained the pool mid-growth
+                for p in added:
+                    self.free_page(p)
+                return False
+            added.append(page)
+        self.tables[rid].extend(added)
         return True
 
     def extend(self, rid: int) -> Optional[int]:
@@ -247,7 +323,9 @@ class PageAllocator:
         None when the pool is exhausted — the caller preempts."""
         if not self.ensure_free(1):
             return None
-        page = self._alloc_page()
+        page = self._take_page()
+        if page is None:
+            return None
         self.tables[rid].append(page)
         return page
 
@@ -261,7 +339,9 @@ class PageAllocator:
             return old, old
         if not self.ensure_free(1):
             return None
-        new = self._alloc_page()
+        new = self._take_page()
+        if new is None:
+            return None
         self.free_page(old)          # our ref only; other holders keep it
         self.tables[rid][block] = new
         self.cow_copies += 1
@@ -609,9 +689,12 @@ class PagedKVArena:
     def load_prefix(self, rid: int, staging: Any, n_tokens: int) -> Any:
         """Seed a staging cache with rid's shared prefix pages covering the
         first `n_tokens` positions: every page overlapping [0, n_tokens)
-        is gathered whole (full pages by construction — the skip boundary
-        never reaches into a partial tail page's garbage).  Returns the
-        rebound (donated) staging."""
+        is gathered whole.  A sub-page boundary is safe — the tail page is
+        either a full shared page or an exact-tuple match of the prompt's
+        own tail, so every gathered position < covered holds the donor's
+        valid K/V, and positions >= n_tokens are recomputed (overwritten)
+        by the next chunk anyway.  Returns the rebound (donated)
+        staging."""
         table = self.allocator.tables[rid]
         n_blocks = -(-n_tokens // self.page_size)
         assert n_blocks <= self._n_shared.get(rid, 0), (
@@ -693,4 +776,5 @@ class PagedKVArena:
             "kv_page_writes": float(self.kv_page_writes),
             "kv_bytes_written": float(self.kv_bytes_written),
             "kv_page_writes_avoided": float(self.kv_page_writes_avoided),
+            "kv_pages_retired": float(a.pages_retired),
         }

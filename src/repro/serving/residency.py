@@ -54,6 +54,9 @@ class ResidencyStats:
     # programmed and incremental pulses issued, equal-skip aware under reuse
     cell_flips: int = 0
     write_pulses: int = 0
+    # arena slots permanently pulled from service after a stuck-at fault
+    # was detected at program time (Hamun-style graceful degradation)
+    slots_retired: int = 0
 
     @property
     def mean_skip(self) -> float:
@@ -77,6 +80,7 @@ class ResidencyStats:
             "install_savings": self.savings,
             "install_cell_flips": float(self.cell_flips),
             "install_write_pulses": float(self.write_pulses),
+            "slots_retired": float(self.slots_retired),
         }
 
 
@@ -90,6 +94,14 @@ class WeightResidencyManager:
     # standalone use records nothing
     wear = None
     flip_hist = None
+    # wear-aware victim blending (Hamun policy half): weight > 0 adds a
+    # per-prior-write penalty to each victim slot's delta cost so installs
+    # rotate toward cold slots; 0 keeps the pure greedy min-delta picker
+    # bit-for-bit.  The engine sets it from its `wear_aware` knob.
+    wear_weight = 0.0
+    # stuck-at fault model (serving/faults.py), injected like the tracer;
+    # None = fault-free, every check site skipped
+    faults = None
 
     def __init__(self, models: Dict[str, Tuple[Any, ModelConfig]],
                  arena_slots: int, *, reuse: bool = True):
@@ -126,6 +138,13 @@ class WeightResidencyManager:
         self.slots: List[Optional[int]] = [None] * arena_slots  # store idx
         self.resident: Dict[int, int] = {}                      # layer -> slot
         self._stamp = [0] * arena_slots                         # LRU step
+        # slots retired after a detected stuck-at fault — never issued again
+        self.retired: Set[int] = set()
+        # one prior write to a slot weighs `wear_weight` raw layer installs
+        # in the blended victim cost; the mean layer size converts "writes"
+        # into the wire-byte units the greedy picker already ranks by
+        self._wear_unit = max(1, int(np.mean(
+            [lay.codes.size for lay in self.store.layers])))
         self.stats = ResidencyStats()
         # Codes are immutable after store construction, so the (occupant,
         # incoming) pair cost is memoizable — tenant turns repeat the same
@@ -138,8 +157,9 @@ class WeightResidencyManager:
         return sum(len(self.layer_ids[m]) for m in set(models))
 
     def fits(self, models: Iterable[str]) -> bool:
-        """Can all these tenants be simultaneously resident?"""
-        return self.layers_of(models) <= self.arena_slots
+        """Can all these tenants be simultaneously resident?  Retired
+        (faulted) slots no longer count toward capacity."""
+        return self.layers_of(models) <= self.arena_slots - len(self.retired)
 
     def resident_fraction(self, model: str) -> float:
         ids = self.layer_ids[model]
@@ -184,9 +204,43 @@ class WeightResidencyManager:
             self._cost_cache[key] = got
         return got
 
-    def _install(self, layer: int, slot: int, step: int) -> int:
+    def _victim_key(self, slot: int, wire: int) -> Tuple[int, int]:
+        """Victim-ranking key blending delta cost with slot wear.  With
+        `wear_weight` 0 this is `(wire, 0)` — the pure greedy min-delta
+        order, bit-for-bit.  With weight w > 0 each prior write to the slot
+        penalizes it by `w * mean_layer_size` wire-byte-equivalents, and the
+        raw write count breaks exact-cost ties toward the coldest slot."""
+        if self.wear_weight <= 0.0 or self.wear is None:
+            return (wire, 0)
+        writes = int(self.wear.writes[slot])
+        penalty = int(round(self.wear_weight * self._wear_unit * writes))
+        return (wire + penalty, writes)
+
+    def _install(self, layer: int, slot: int, step: int) -> Optional[int]:
+        """Commit `layer` into `slot`; returns wire bytes, or None when the
+        program-and-verify detects a stuck-at fault — the slot is then
+        retired (its occupant, if any, is no longer resident) and the caller
+        must remap the layer to a healthy slot."""
         occupant = self.slots[slot]
         wire, skip, flips, pulses = self._cost(occupant, layer)
+        if self.faults is not None and self.faults.check("weight", slot):
+            # the pulses were spent before verify failed: wear still lands,
+            # then the slot leaves service for good
+            if self.wear is not None:
+                self.wear.record(slot, flips=flips, pulses=pulses,
+                                 group=self.group_of[layer])
+                self.wear.retire(slot)
+            self.stats.cell_flips += flips
+            self.stats.write_pulses += pulses
+            self.stats.slots_retired += 1
+            self.retired.add(slot)
+            if occupant is not None:
+                self.resident.pop(occupant, None)
+            self.slots[slot] = None
+            if self.tracer.enabled:
+                self.tracer.instant("slot_retired", slot=slot, layer=layer,
+                                    model=self.model_of[layer])
+            return None
         raw = self.store.layers[layer].codes.size
         self.stats.raw_bytes += raw
         self.stats.wire_bytes += wire
@@ -236,7 +290,8 @@ class WeightResidencyManager:
             occ = self.slots[slot]
             return occ is None or self.model_of[occ] not in pinned
 
-        candidates = [s for s in range(self.arena_slots) if evictable(s)]
+        candidates = [s for s in range(self.arena_slots)
+                      if s not in self.retired and evictable(s)]
         if len(candidates) < len(missing):
             raise RuntimeError(
                 f"weight arena too small: need {len(missing)} slots for "
@@ -249,13 +304,23 @@ class WeightResidencyManager:
                 for slot in candidates:
                     wire = self._cost(self.slots[slot], layer)[0]
                     # ties (e.g. reuse off: everything raw) break LRU-first
-                    key = (wire, self._stamp[slot])
+                    key = (*self._victim_key(slot, wire), self._stamp[slot])
                     if best is None or key < best[0]:
                         best = (key, layer, slot)
             _, layer, slot = best
-            wire_total += self._install(layer, slot, step)
-            missing.remove(layer)
+            wire = self._install(layer, slot, step)
             candidates.remove(slot)
+            if wire is None:
+                # slot died at program time: the layer stays missing and
+                # retries on the next-best healthy slot
+                if len(candidates) < len(missing):
+                    raise RuntimeError(
+                        f"weight arena exhausted by faults: need "
+                        f"{len(missing)} slots for {model}, only "
+                        f"{len(candidates)} healthy evictable left")
+                continue
+            wire_total += wire
+            missing.remove(layer)
         self.touch(model, step)
         return wire_total
 
@@ -326,6 +391,8 @@ class InstallPipeline:
                             missing=len(missing), step=step)
 
     def _evictable(self, slot: int, pinned: Set[str]) -> bool:
+        if slot in self.res.retired:
+            return False
         occ = self.res.slots[slot]
         return occ is None or self.res.model_of[occ] not in pinned
 
@@ -336,12 +403,16 @@ class InstallPipeline:
                 continue
             for layer in self._missing:
                 wire = self.res._cost(self.res.slots[slot], layer)[0]
-                key = (wire, layer, self.res._stamp[slot])
+                key = (*self.res._victim_key(slot, wire), layer,
+                       self.res._stamp[slot])
                 if best is None or key < best[0]:
                     best = (key, layer, slot)
         if best is None:
             return None
-        (wire, _, _), layer, slot = best
+        _, layer, slot = best
+        # key[0] is the wear-blended cost, not the wire bytes — re-read the
+        # memoized cost for the tick budget
+        wire = self.res._cost(self.res.slots[slot], layer)[0]
         return layer, slot, wire
 
     def pump(self, ticks: int, pinned: Set[str], step: int
@@ -388,8 +459,15 @@ class InstallPipeline:
             processed += wire * (spend / total)
             self._cur[2] = left
             if left == 0:
-                committed += self.res._install(layer, slot, step)
+                done = self.res._install(layer, slot, step)
                 self._cur = None
+                if done is None:
+                    # the victim slot faulted at program time — it is now
+                    # retired; re-queue the layer so the next unit picks a
+                    # healthy slot
+                    self._missing.append(layer)
+                else:
+                    committed += done
         if self._cur is None and not self._missing:
             self.target = None          # fully resident: pipeline drains
         return committed, int(round(processed))

@@ -41,7 +41,8 @@ class WearPlane:
     start at 1 because device page 0 is the scratch page and never takes
     an accounted write."""
 
-    __slots__ = ("name", "first", "writes", "flips", "pulses", "by_group")
+    __slots__ = ("name", "first", "writes", "flips", "pulses", "by_group",
+                 "retired")
 
     def __init__(self, name: str, n: int, first: int = 0):
         if n < 1:
@@ -54,6 +55,10 @@ class WearPlane:
         # (id, group) -> [writes, flips, pulses]: the slot×layer-group
         # dimension — which layer family produced each slot's wear
         self.by_group: Dict[Tuple[int, object], List[int]] = {}
+        # ids permanently pulled from service after a stuck-at fault —
+        # the fault-degradation half of the Hamun story; the owning
+        # arena stops issuing them, this plane just remembers them
+        self.retired: set = set()
 
     @property
     def n(self) -> int:
@@ -70,6 +75,12 @@ class WearPlane:
             acc[0] += writes
             acc[1] += flips
             acc[2] += pulses
+
+    def retire(self, idx: int) -> None:
+        """Mark id `idx` permanently failed (stuck-at fault detected at
+        program time).  Idempotent; wear already accrued stays counted —
+        the pulses were spent even though the write didn't verify."""
+        self.retired.add(int(idx))
 
     def counts(self, metric: str = "writes") -> np.ndarray:
         if metric not in _METRICS:
@@ -108,6 +119,7 @@ class WearPlane:
             "pulses": float(self.total("pulses")),
             "gini_writes": self.gini("writes"),
             "gini_flips": self.gini("flips"),
+            "retired": float(len(self.retired)),
         }
 
     def as_json(self) -> Dict:
@@ -119,6 +131,7 @@ class WearPlane:
             "pulses": [int(v) for v in self.pulses],
             "gini": {m: self.gini(m) for m in _METRICS},
             "hottest": [[i, c] for i, c in self.hottest()],
+            "retired": sorted(self.retired),
             "histogram": self.histogram(),
             "by_group": {
                 f"{i}/{g}": list(v) for (i, g), v in sorted(

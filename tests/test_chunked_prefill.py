@@ -305,6 +305,21 @@ def test_mla_moe_chunked_matches_monolithic():
         assert c.generated == m.generated, c.rid
 
 
+def test_mlstm_tenant_rejects_chunked_prefill():
+    """Chunkwise-parallel mLSTM prefill is not chunking-invariant (float
+    regrouping at chunk boundaries changes tokens), so the engine must
+    refuse prefill_chunk > 0 for mLSTM tenants at construction instead of
+    serving silently divergent tokens — the monolithic path stays open."""
+    cfg = get_config("xlstm-350m", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="mLSTM"):
+        one_tenant_engine(cfg, params, chunk=8)
+    # prefill_chunk=0 still admits the tenant, and a pure-attention
+    # tenant is unaffected by the rejection rule at any chunk size
+    one_tenant_engine(cfg, params, chunk=0)
+    one_tenant_engine(CFG, PARAMS, chunk=8)
+
+
 def test_paged_chunked_prefix_sharing_and_cow_exact():
     """An identical prompt arriving mid-decode shares the first request's
     pages at chunk granularity (reservation opens with the shared prefix,

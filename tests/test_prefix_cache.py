@@ -419,11 +419,11 @@ def test_warm_request_skips_covered_chunks_token_for_token():
 
     for r in (c1, s1, s2, w1, w2):
         assert r.generated == oracle, r.rid
-    # covered = 4 full pages = 16 tokens, capped at len-1 and floored to a
-    # chunk boundary → 12 skipped, 4 computed
-    assert s["prefill_tokens"] == 16 + 4
-    assert s["prefix_hit_tokens"] == 12
-    assert s["prefix_hit_rate"] == pytest.approx(12 / 32)
+    # covered = 4 full pages = 16 tokens, capped at len-1 → 15 skipped,
+    # exactly 1 computed (the final token's chunk produces real logits)
+    assert s["prefill_tokens"] == 16 + 1
+    assert s["prefix_hit_tokens"] == 15
+    assert s["prefix_hit_rate"] == pytest.approx(15 / 32)
     assert s["kv_prefix_cached_pages"] > 0
     assert warm._prefills == {}
 
@@ -556,8 +556,8 @@ def test_full_prompt_cached_still_emits_first_token():
     eng.run()
     r2 = eng.submit("a", prompt, max_new_tokens=3)
     s = eng.run()
-    # covered = 8 (exact partial/full match), capped at 7, floored → 4
-    assert s["prefill_tokens"] == 8 + 4
+    # covered = 8 (exact partial/full match), capped at 7 → 1 computed
+    assert s["prefill_tokens"] == 8 + 1
     assert r2.generated == r1.generated
     assert r2.generated == sequential_tokens(prompt, 3, cache_len=24 * PAGE)
 

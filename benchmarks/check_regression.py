@@ -69,6 +69,19 @@ SPECS: Dict[str, Dict[str, Tuple[str, float]]] = {
         "wear_gini_weight_on": ("lower", 0.15),
         "faults_survived": ("higher", 0.0),
     },
+    # part 9: the three decode arms must stay token-for-token identical
+    # (a flag, so any drop is a correctness break) and sampling must
+    # never regress back to per-row host syncs; step counts are a
+    # deterministic schedule, tolerance 0.  The per-arm component
+    # seconds in this part are wall-clock and deliberately ungated.
+    "kernel": {
+        "tokens_identical_fused": ("higher", 0.0),
+        "tokens_identical_pallas": ("higher", 0.0),
+        "sample_syncs_max_split": ("lower", 0.0),
+        "sample_syncs_max_fused": ("lower", 0.0),
+        "sample_syncs_max_pallas": ("lower", 0.0),
+        "steps": ("lower", 0.0),
+    },
 }
 
 

@@ -57,6 +57,17 @@ reuse-on arm must spend strictly less install write energy — the §V-C
 equal-skip pulses — while the prefix cache's avoided page writes and the
 per-slot/per-page wear Gini are reported off the engine's WearMap.
 
+Part 9 — kernel backend & fused sampling: the decode hot path run three
+ways on one deterministic virtual-clock schedule with mixed greedy and
+temperature/top-k requests.  The legacy arm decodes through the XLA
+gather path and samples on the host; the fused arm keeps the XLA kernel
+but samples inside the jitted step; the Pallas arm routes paged GQA
+decode through the `kernels/paged_attention` kernel (interpret mode off
+TPU) with fused sampling.  All three must be token-for-token identical,
+every arm must spend at most one sampling host sync per decoded step
+(the PR 9 per-row `int(argmax)` bug), and the tracer's component table
+shows where the host seconds went.
+
 Every run writes the per-part headline numbers to `BENCH_serving.json`
 at the repo root (override with `--out`, disable with `--out ''`), so
 the perf trajectory persists commit over commit.  `--parts` selects a
@@ -741,6 +752,127 @@ def fault_wear_bench() -> dict:
     return out
 
 
+# ------------------- kernel backend & fused sampling (part 9)
+KB_STEP_DT = 1e-3           # one simulated engine step = 1 ms
+KB_PAGE = 4
+KB_N_PAGES = 64
+KB_SYS_LEN = 8              # shared system prompt (2 full pages)
+
+
+def _kernel_workload(cfg, seed: int = 13, n: int = 12):
+    """One-tenant Poisson arrivals behind a shared system prompt, a third
+    of them sampled (fixed seed or rid-derived key) so the fused sampler
+    sees greedy, top-k, and plain-temperature rows in the same batch.
+    Jobs carry per-request sampling kwargs, so this part drives its own
+    arrival loop instead of `drive_simulated`."""
+    rng = np.random.default_rng(seed)
+    sys_prefix = rng.integers(1, cfg.vocab, KB_SYS_LEN).tolist()
+    t, jobs = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(2.0)) * KB_STEP_DT
+        plen = int(rng.integers(3, 10))
+        prompt = sys_prefix + rng.integers(1, cfg.vocab, plen).tolist()
+        if i % 3 == 1:
+            kw = dict(temperature=0.8, top_k=9, seed=100 + i)
+        elif i % 3 == 2:
+            kw = dict(temperature=1.1)       # key derives from the rid
+        else:
+            kw = {}
+        jobs.append((t, "base", prompt, int(rng.integers(6, 12)), kw))
+    return jobs
+
+
+def _run_kernel_arm(cfg, params, jobs, *, backend: str, fuse: bool):
+    clock = VirtualClock()
+    eng = ServingEngine(
+        [EngineModel("base", params, cfg, kv_slots=4, max_seq=48,
+                     kv_layout="paged", page_size=KB_PAGE,
+                     n_pages=KB_N_PAGES, prefix_cache=True,
+                     kernel_backend=backend)],
+        sched=SchedulerConfig(max_prefill_per_step=2),
+        clock=clock, tracer=Tracer(),
+        fuse_sampling=fuse, kernel_interpret=True)
+    pending = sorted((t, i) for i, (t, *_rest) in enumerate(jobs))
+    for _ in range(100_000):
+        if not pending and not eng.has_work():
+            break
+        while pending and pending[0][0] <= clock.t:
+            _, i = pending.pop(0)
+            _, model, prompt, gen, kw = jobs[i]
+            eng.submit(model, prompt, max_new_tokens=gen, **kw)
+        if eng.has_work():
+            eng.step()
+        clock.advance(KB_STEP_DT)
+    else:
+        raise RuntimeError("part-9 arm did not drain — engine livelock?")
+    summary = eng.summary(clock.t)
+    summary["_generated"] = {r.rid: list(r.generated)
+                             for r in eng.requests.values()}
+    summary["sample_syncs_max"] = max(
+        (rec.sample_syncs for rec in eng.metrics.steps if rec.n_decoded),
+        default=0)
+    return summary
+
+
+def kernel_backend_bench() -> dict:
+    print("\n== Kernel backend & fused sampling "
+          "(virtual clock, XLA vs Pallas-interpret, split vs fused) ==")
+    cfg = get_config("gemma-7b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    jobs = _kernel_workload(cfg)
+
+    arms = {"xla-split": ("xla", False),
+            "xla-fused": ("xla", True),
+            "pallas-fused": ("pallas", True)}
+    out = {}
+    for tag, (backend, fuse) in arms.items():
+        _run_kernel_arm(cfg, params, jobs, backend=backend,
+                        fuse=fuse)                          # jit warmup
+        s = _run_kernel_arm(cfg, params, jobs, backend=backend, fuse=fuse)
+        out[tag] = s
+        csv_row(f"serving/kernel-{tag}",
+                s.get("component_decode_s", 0.0) * 1e3,
+                f"sample_ms={s.get('component_sample_s', 0.0)*1e3:.2f};"
+                f"syncs_max={int(s['sample_syncs_max'])};"
+                f"steps={int(s['steps'])}")
+        print(f"-- {tag}:")
+        print(format_summary(s))
+
+    base = out["xla-split"]
+    assert out["xla-fused"]["_generated"] == base["_generated"], \
+        "fused sampling changed decoded tokens"
+    assert out["pallas-fused"]["_generated"] == base["_generated"], \
+        "pallas kernel backend changed decoded tokens"
+    for tag, s in out.items():
+        assert s["steps"] == base["steps"], f"{tag} changed the schedule"
+        assert s["sample_syncs_max"] <= 1, \
+            f"{tag}: sampling cost more than one host sync per step"
+        assert s.get("component_sample_s", 0.0) > 0.0, \
+            f"{tag}: tracer recorded no sample spans"
+    out["tokens_identical_fused"] = 1
+    out["tokens_identical_pallas"] = 1
+
+    tags = list(arms)
+    steps = {t: max(int(out[t]["steps"]), 1) for t in tags}
+    print(f"{'component':<10}" + "".join(f"{t:>24}" for t in tags))
+    print(f"{'':<10}" + f"{'total ms':>14} {'us/step':>9}" * len(tags))
+    for comp in TRACE_COMPONENTS:
+        vals = [out[t].get(f"component_{comp}_s", 0.0) for t in tags]
+        if not any(vals):
+            continue
+        print(f"{comp:<10}" + "".join(
+            f"{v*1e3:>14.2f} {v*1e6/steps[t]:>9.1f}"
+            for t, v in zip(tags, vals)))
+    print(f"-- token-for-token identical across all three arms over "
+          f"{int(base['steps'])} steps; sampling host syncs per decoded "
+          f"step: " + ", ".join(
+              f"{t}={int(out[t]['sample_syncs_max'])}" for t in tags) +
+          " (the legacy path paid one sync per row)")
+    for tag in arms:
+        out[tag].pop("_generated")
+    return out
+
+
 # ------------------------------------------------- headline persistence
 _DEFAULT_OUT = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -830,6 +962,22 @@ def _headlines(results: dict) -> dict:
             "pages_retired": top["pages_retired"],
             "steps": fl["wear-on"]["steps"],
         }
+    kb = results.get("kernel")
+    if kb:
+        h["kernel"] = {
+            "tokens_identical_fused": kb["tokens_identical_fused"],
+            "tokens_identical_pallas": kb["tokens_identical_pallas"],
+            "sample_syncs_max_split": kb["xla-split"]["sample_syncs_max"],
+            "sample_syncs_max_fused": kb["xla-fused"]["sample_syncs_max"],
+            "sample_syncs_max_pallas": kb["pallas-fused"]["sample_syncs_max"],
+            "steps": kb["pallas-fused"]["steps"],
+        }
+        # wall-clock component seconds per arm: reported, never gated
+        for tag in ("xla-split", "xla-fused", "pallas-fused"):
+            h["kernel"][f"decode_s_{tag}"] = \
+                kb[tag].get("component_decode_s", 0.0)
+            h["kernel"][f"sample_s_{tag}"] = \
+                kb[tag].get("component_sample_s", 0.0)
     comp = results.get("components")
     if comp:
         h["components"] = {
@@ -891,12 +1039,12 @@ def tenant_reuse_bench() -> dict:
 
 def main(argv=None) -> dict:
     p = argparse.ArgumentParser(description="serving-engine benchmarks")
-    p.add_argument("--parts", default="1,2,3,4,5,6,7,8",
+    p.add_argument("--parts", default="1,2,3,4,5,6,7,8,9",
                    help="comma-separated parts to run: 1 tenant reuse, "
                         "2 paged-vs-slot, 3 install overlap, 4 chunked "
                         "prefill, 5 prefix cache, 6 component breakdown, "
                         "7 wear & write energy, 8 wear-aware placement "
-                        "& fault sweep")
+                        "& fault sweep, 9 kernel backend & fused sampling")
     p.add_argument("--out", default=_DEFAULT_OUT,
                    help="path for the BENCH_serving.json headline dump "
                         "('' disables)")
@@ -927,6 +1075,8 @@ def main(argv=None) -> dict:
         results["wear"] = wear_energy_bench(args.wear_json)
     if 8 in parts:
         results["faults"] = fault_wear_bench()
+    if 9 in parts:
+        results["kernel"] = kernel_backend_bench()
     if args.out:
         _write_bench_json(args.out, _headlines(results))
     return results

@@ -1,21 +1,43 @@
-"""Jitted wrapper: groups query heads per KV head (GQA stays native — no
-pool expansion) and picks interpret mode off-TPU."""
+"""Wrapper: groups query heads per KV head (GQA stays native — no pool
+expansion), with the execution mode plumbed in explicitly.
+
+No `@jax.jit` here: callers (the serving decode step, the kernel tests)
+jit the surrounding computation, and `interpret` must stay a trace-time
+python constant they control — the old wrapper sniffed
+`jax.default_backend()` inside its own jit trace, so an engine could not
+pin interpret mode (CI equivalence) or device mode (TPU bench) per
+tenant."""
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.paged_attention.kernel import paged_attention_pallas
 
 
-@jax.jit
-def paged_attention(q, k_pool, v_pool, tables, pos):
-    """q: (B, H, D) one query token per row; k/v_pool: (P, page, Hkv, D)
-    page pools (H a multiple of Hkv); tables: (B, T) int32 physical page
-    ids; pos: (B,) int32 per-row positions.  Returns (B, H, D)."""
+def paged_attention(q, k_pool, v_pool, tables, pos, *, interpret=None):
+    """q: (B, H, D) one query token per row, heads flat in KV-major order
+    (head h serves KV head h // (H/Hkv)); k/v_pool: (P, page, Hkv, D) page
+    pools; tables: (B, T) int32 physical page ids; pos: (B,) int32 per-row
+    positions.  Returns (B, H, D).
+
+    `interpret=None` resolves to interpret mode off-TPU at call time;
+    pass an explicit bool to pin it (the engine's `kernel_interpret`
+    knob does).  Raises ValueError instead of silently reshaping on a
+    non-divisible head count or accepting a non-int32 page table (a
+    float table would truncate physical page ids)."""
     B, H, D = q.shape
     Hkv = k_pool.shape[2]
+    if H % Hkv != 0:
+        raise ValueError(
+            f"paged_attention: {H} query heads are not divisible by "
+            f"{Hkv} KV heads — GQA grouping needs H % Hkv == 0")
+    if tables.dtype != jnp.int32:
+        raise ValueError(
+            f"paged_attention: page table dtype {tables.dtype} must be "
+            "int32 (physical page ids)")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     qg = q.reshape(B, Hkv, H // Hkv, D)
-    interpret = jax.default_backend() != "tpu"
-    o = paged_attention_pallas(qg, k_pool, v_pool,
-                               tables.astype(jnp.int32),
-                               pos.astype(jnp.int32), interpret=interpret)
+    o = paged_attention_pallas(qg, k_pool, v_pool, tables,
+                               pos.astype(jnp.int32),
+                               interpret=bool(interpret))
     return o.reshape(B, H, D)

@@ -48,6 +48,9 @@ def _run_engine(args) -> None:
     if args.prefix_cache and args.kv_layout != "paged":
         raise SystemExit("--prefix-cache needs --kv-layout paged "
                          "(slot arenas have no pages to retain)")
+    if args.kernel_backend == "pallas" and args.kv_layout != "paged":
+        raise SystemExit("--kernel-backend pallas needs --kv-layout paged "
+                         "(the kernel reads a page pool)")
     max_seq = args.prompt_len + args.gen + 8
     base = init_params(jax.random.PRNGKey(0), cfg)
     # tenant-b is a perturbed variant of tenant-a (the co-hosted fine-tune
@@ -56,7 +59,8 @@ def _run_engine(args) -> None:
     kv = dict(kv_slots=args.kv_slots, max_seq=max_seq,
               kv_layout=args.kv_layout, page_size=args.page_size,
               prefix_cache=args.prefix_cache,
-              prefix_cache_pages=args.prefix_cache_pages)
+              prefix_cache_pages=args.prefix_cache_pages,
+              kernel_backend=args.kernel_backend)
     tenants = [
         EngineModel("tenant-a", base, cfg, **kv),
         EngineModel("tenant-b", variant, cfg, **kv),
@@ -83,6 +87,7 @@ def _run_engine(args) -> None:
         prefill_chunk=args.prefill_chunk,
         bucket_growth=args.bucket_growth,
         staging_growth=args.staging_growth,
+        fuse_sampling=not args.no_fuse_sampling,
         wear_aware=args.wear_aware,
         fault_rate=args.fault_rate,
         fault_seed=args.fault_seed)
@@ -199,6 +204,17 @@ def main() -> None:
     p.add_argument("--prefix-cache-pages", type=int, default=0,
                    help="engine: cap on retained prefix-cache pages per "
                         "tenant (0 = bounded only by on-demand eviction)")
+    p.add_argument("--kernel-backend", choices=("xla", "pallas"),
+                   default="xla",
+                   help="engine: paged decode attention backend — 'pallas' "
+                        "routes GQA decode through the paged-attention "
+                        "kernel (skips fully-masked tail pages; interpret "
+                        "mode off-TPU), 'xla' keeps the full-width gather "
+                        "(needs --kv-layout paged for 'pallas')")
+    p.add_argument("--no-fuse-sampling", action="store_true",
+                   help="engine: split sampling back out of the jitted "
+                        "paged decode step (fused on-device sampling is "
+                        "the default — logits never leave the device)")
     p.add_argument("--trace-out", type=str, default="",
                    help="engine: write a Chrome-trace-format JSON of the "
                         "run (per-step component spans + request lifecycle "

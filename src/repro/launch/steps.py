@@ -182,19 +182,63 @@ def cached_stage_quantize(cfg: ModelConfig, staging_len: int):
                                         ring_windows=False))
 
 
-def make_paged_serve_step(cfg: ModelConfig):
+def make_paged_serve_step(cfg: ModelConfig, kernel_backend: str = "xla",
+                          interpret: bool = False):
     def paged_serve_step(params, token, caches, pos, page_table):
         return decode_step(params, token, caches, pos, cfg,
-                           page_table=page_table)
+                           page_table=page_table,
+                           kernel_backend=kernel_backend,
+                           kernel_interpret=interpret)
     return paged_serve_step
 
 
 @functools.lru_cache(maxsize=None)
-def cached_paged_serve_step(cfg: ModelConfig):
+def cached_paged_serve_step(cfg: ModelConfig, kernel_backend: str = "xla",
+                            interpret: bool = False):
     """Decode step over a paged KV arena: caches are page pools, `pos` is
     the per-row (B,) write positions, `page_table` (B, T) maps each row's
-    logical blocks to physical pages (serving.paging builds both)."""
-    return jax.jit(make_paged_serve_step(cfg), donate_argnums=(2,))
+    logical blocks to physical pages (serving.paging builds both).
+    `kernel_backend`/`interpret` are trace-time constants selecting the
+    Pallas paged-attention kernel and its interpret mode (engine knob)."""
+    return jax.jit(make_paged_serve_step(cfg, kernel_backend, interpret),
+                   donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def cached_fused_paged_serve_step(cfg: ModelConfig,
+                                  kernel_backend: str = "xla",
+                                  interpret: bool = False):
+    """Paged decode step with sampling fused in: logits never leave the
+    device — the jitted fn samples every row (greedy/temperature/top-k,
+    `serving.sampling.sample_tokens`) and returns only the (B,) int32
+    token ids.  temps (B,) f32, top_ks (B,) int32, keys (B, 2) raw uint32
+    per-request PRNG roots, steps (B,) int32 fold_in indices."""
+    from repro.serving.sampling import sample_tokens
+
+    def fused_paged_serve_step(params, token, caches, pos, page_table,
+                               temps, top_ks, keys, steps):
+        logits, new_caches = decode_step(params, token, caches, pos, cfg,
+                                         page_table=page_table,
+                                         kernel_backend=kernel_backend,
+                                         kernel_interpret=interpret)
+        toks = sample_tokens(logits, cfg.vocab, temperatures=temps,
+                             top_ks=top_ks, keys=keys, steps=steps)
+        return toks, new_caches
+
+    return jax.jit(fused_paged_serve_step, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def cached_sample_tokens(vocab: int):
+    """Batched sampler for the split (non-fused) path: one jitted device
+    call per decode batch instead of one host sync per row."""
+    from repro.serving.sampling import sample_tokens
+
+    def sample(logits, temps, top_ks, keys, steps):
+        return sample_tokens(logits, vocab, temperatures=temps,
+                             top_ks=top_ks, keys=keys, steps=steps)
+
+    return jax.jit(sample)
 
 
 # ------------------------------------------------------------- shardings

@@ -19,6 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paged_attention.ops import paged_attention as _pallas_paged
 from repro.nn.config import ModelConfig
 from repro.nn.layers import _init, apply_rope, init_rmsnorm, rmsnorm, rope_angles
 from repro.parallel.sharding import shard
@@ -283,6 +284,8 @@ def attention(
     make_cache: bool = False,
     cache_len: int = 0,
     page_table: Optional[jax.Array] = None,
+    kernel_backend: str = "xla",
+    kernel_interpret: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Unified attention entry point.
 
@@ -296,6 +299,14 @@ def attention(
     * paged decode: cache leaves are page pools (P, page, ...) and
       page_table (B, T) maps each row's logical blocks to physical pages
       (cache_pos must be a per-row (B,) vector)
+
+    kernel_backend="pallas" routes eligible paged GQA decode
+    (single-token, no sliding window, no logit softcap) through the
+    Pallas paged-attention kernel, which walks only the pages at or
+    below each row's position instead of gathering the full table
+    width; everything else falls back to the XLA path.
+    kernel_interpret pins the kernel's interpret mode (CI equivalence
+    off-TPU) — both are trace-time constants.
     """
     B, S, _ = x.shape
     if positions is None:
@@ -314,23 +325,46 @@ def attention(
 
     q, k, v = _gqa_qkv(params, x, cfg, positions)
     new_cache = None
+    o = None
 
     if cache is not None:
         if page_table is not None:
             # Paged decode: scatter the new token's K/V into its physical
-            # page, then gather the row's pages into a contiguous
-            # (B, T·page) view and run the same masked-softmax math as the
-            # slot path.  SWA layers store full positions and mask the
-            # window (no ring buffer).
-            kc, vc, new_cache = _paged_append_gqa(cache, k, v, cfg,
-                                                  cache_pos, page_table)
-            Sc = kc.shape[1]
-            kpos = jnp.arange(Sc)[None, :]
-            cp = cache_pos[:, None]
-            valid = kpos <= cp
-            if layer_window > 0:
-                valid = valid & (kpos > cp - layer_window)
-            valid = valid[:, None, :]                     # (B, 1, Sc)
+            # page, then attend over the row's pages.  SWA layers store
+            # full positions and mask the window (no ring buffer).
+            use_pallas = (kernel_backend == "pallas" and S == 1
+                          and layer_window <= 0 and cfg.logit_softcap <= 0)
+            if use_pallas:
+                # Pallas kernel walks only pages at/below each row's
+                # position — no full-width gather.  Windowed/softcap
+                # layers (none in the paged configs today) fall back to
+                # the XLA path below.  int8 pools are dequantized
+                # elementwise first: identical values to the XLA path's
+                # gather-then-dequant.
+                new_cache = _paged_scatter_gqa(cache, k, v, cfg,
+                                               cache_pos, page_table)
+                if cfg.kv_cache_dtype == "int8":
+                    kp = _kv_dequant(new_cache["k"], new_cache["k_scale"],
+                                     k.dtype)
+                    vp = _kv_dequant(new_cache["v"], new_cache["v_scale"],
+                                     v.dtype)
+                else:
+                    kp, vp = new_cache["k"], new_cache["v"]
+                H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+                o = _pallas_paged(q[:, 0].reshape(B, H, D), kp, vp,
+                                  page_table, cache_pos,
+                                  interpret=kernel_interpret)
+                o = o.reshape(B, 1, Hkv, H // Hkv, D)
+            else:
+                kc, vc, new_cache = _paged_append_gqa(cache, k, v, cfg,
+                                                      cache_pos, page_table)
+                Sc = kc.shape[1]
+                kpos = jnp.arange(Sc)[None, :]
+                cp = cache_pos[:, None]
+                valid = kpos <= cp
+                if layer_window > 0:
+                    valid = valid & (kpos > cp - layer_window)
+                valid = valid[:, None, :]                 # (B, 1, Sc)
         else:
             # Decode: append to the ring/full cache then attend over it.
             # SWA layers keep a ring buffer of `window` slots
@@ -392,14 +426,15 @@ def attention(
                 else:
                     valid = kpos <= cp
                 valid = valid[:, None, :]                 # (B|1, 1, Sc)
-        scale = 1.0 / math.sqrt(cfg.head_dim)
-        s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
-                       kc.astype(jnp.float32)) * scale
-        if cfg.logit_softcap > 0:
-            s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
-        s = jnp.where(valid[:, None, None], s, NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+        if o is None:
+            scale = 1.0 / math.sqrt(cfg.head_dim)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            if cfg.logit_softcap > 0:
+                s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+            s = jnp.where(valid[:, None, None], s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vc.astype(jnp.float32))
     else:
         if S <= 1024:
             mask = _mask(positions, positions, causal=cfg.causal,
@@ -507,6 +542,22 @@ def _paged_append_gqa(cache, k, v, cfg: ModelConfig, cache_pos, page_table):
         new_cache = {"k": scatter(cache["k"], k), "v": scatter(cache["v"], v)}
         kc, vc = gather(new_cache["k"]), gather(new_cache["v"])
     return kc, vc, new_cache
+
+
+def _paged_scatter_gqa(cache, k, v, cfg: ModelConfig, cache_pos, page_table):
+    """Scatter-only variant of `_paged_append_gqa` for the Pallas path:
+    writes this step's K/V into the pools and returns the updated cache
+    without materializing the (B, T·page, ...) gathered view — the kernel
+    reads the pools through the page table itself."""
+    scatter, _ = _paged_ops(cache["k"], cache_pos, page_table)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        return {"k": scatter(cache["k"], kq),
+                "v": scatter(cache["v"], vq),
+                "k_scale": scatter(cache["k_scale"], ks),
+                "v_scale": scatter(cache["v_scale"], vs)}
+    return {"k": scatter(cache["k"], k), "v": scatter(cache["v"], v)}
 
 
 def _dus_batch(cache: jax.Array, new: jax.Array, pos) -> jax.Array:

@@ -69,6 +69,8 @@ def forward(
     cache_len: int = 0,
     last_only: bool = False,
     page_table=None,
+    kernel_backend: str = "xla",
+    kernel_interpret: bool = False,
 ) -> Tuple[jax.Array, Optional[Any], jax.Array]:
     """Returns (logits, new_caches, aux_loss).  ``last_only`` restricts the
     unembed to the final position (prefill/decode)."""
@@ -76,7 +78,8 @@ def forward(
     x, new_caches, aux = apply_stack(
         params["stack"], x, cfg, prefix_len=prefix_len, caches=caches,
         cache_pos=cache_pos, make_cache=make_cache, cache_len=cache_len,
-        page_table=page_table)
+        page_table=page_table,
+        kernel_backend=kernel_backend, kernel_interpret=kernel_interpret)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if last_only:
         x = x[:, -1:]
@@ -242,12 +245,17 @@ def chunk_prefill(params: Params, tokens: jax.Array, caches, start, n_valid,
 
 
 def decode_step(params: Params, token: jax.Array, caches, pos,
-                cfg: ModelConfig, page_table=None):
+                cfg: ModelConfig, page_table=None,
+                kernel_backend: str = "xla", kernel_interpret: bool = False):
     """One autoregressive step.  token (B,) int32; pos scalar or (B,) int32.
     With ``page_table`` (B, T), caches are page pools and pos must be the
-    per-row (B,) write positions (see serving.paging)."""
+    per-row (B,) write positions (see serving.paging).  kernel_backend
+    routes paged GQA attention through the Pallas kernel (trace-time
+    constant; see nn.attention)."""
     batch = {"tokens": token[:, None]}
     logits, new_caches, _ = forward(params, batch, cfg, caches=caches,
                                     cache_pos=pos, last_only=True,
-                                    page_table=page_table)
+                                    page_table=page_table,
+                                    kernel_backend=kernel_backend,
+                                    kernel_interpret=kernel_interpret)
     return logits[:, 0], new_caches

@@ -117,6 +117,8 @@ def apply_block(
     cache_len: int = 0,
     page_table=None,
     valid_len=None,
+    kernel_backend: str = "xla",
+    kernel_interpret: bool = False,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x, new_cache, aux_loss).  ``valid_len`` marks how many of a
     chunked-prefill chunk's tokens are real (recurrent layers freeze their
@@ -138,7 +140,8 @@ def apply_block(
     y_attn, new_attn_cache = attention(
         bp["attn"], h, cfg, layer_window=window, positions=positions,
         prefix_len=prefix_len, cache=attn_cache, cache_pos=cache_pos,
-        make_cache=make_cache, cache_len=cache_len, page_table=page_table)
+        make_cache=make_cache, cache_len=cache_len, page_table=page_table,
+        kernel_backend=kernel_backend, kernel_interpret=kernel_interpret)
 
     new_cache: Optional[Params] = None
     if kind == "hybrid":
@@ -237,6 +240,8 @@ def apply_stack(
     cache_len: int = 0,
     page_table=None,
     valid_len=None,
+    kernel_backend: str = "xla",
+    kernel_interpret: bool = False,
 ) -> Tuple[jax.Array, Optional[Any], jax.Array]:
     aux_total = jnp.zeros((), jnp.float32)
     plan = stack_plan(cfg)
@@ -250,7 +255,8 @@ def apply_stack(
             apply_block, cfg=cfg, i=start, positions=positions,
             prefix_len=prefix_len, cache_pos=cache_pos,
             make_cache=make_cache, cache_len=cache_len,
-            page_table=page_table, valid_len=valid_len)
+            page_table=page_table, valid_len=valid_len,
+            kernel_backend=kernel_backend, kernel_interpret=kernel_interpret)
 
         if not scanned:
             if cfg.remat and seg_cache is None and not make_cache:

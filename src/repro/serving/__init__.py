@@ -16,7 +16,7 @@ from repro.serving.paging import PageAllocator, PagedKVArena
 from repro.serving.prefix_cache import RadixNode, RadixPrefixCache
 from repro.serving.request import Request, RequestStatus
 from repro.serving.residency import InstallPipeline, WeightResidencyManager
-from repro.serving.sampling import request_key, sample_token
+from repro.serving.sampling import request_key, sample_token, sample_tokens
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
 from repro.serving.tracing import NULL_TRACER, NullTracer, Tracer
 from repro.serving.wear import WearMap, WearPlane, gini_coefficient
@@ -30,7 +30,7 @@ __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER",
     "Request", "RequestStatus", "InstallPipeline", "InstallCostModel",
     "WeightResidencyManager", "SchedulerConfig", "StepScheduler",
-    "drive_simulated", "request_key", "sample_token",
+    "drive_simulated", "request_key", "sample_token", "sample_tokens",
     "PrefillProgress", "bucket_for", "bucket_ladder",
     "WearMap", "WearPlane", "gini_coefficient", "FaultModel",
 ]

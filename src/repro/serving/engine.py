@@ -61,13 +61,16 @@ import math
 import time
 from typing import Any, Callable, Dict, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.steps import (cached_chunk_prefill_step,
+                                cached_fused_paged_serve_step,
                                 cached_paged_serve_step, cached_prefill_step,
-                                cached_serve_step, cached_stage_install,
-                                cached_stage_quantize, prefill_cache_info)
+                                cached_sample_tokens, cached_serve_step,
+                                cached_stage_install, cached_stage_quantize,
+                                prefill_cache_info)
 from repro.nn.config import ModelConfig
 from repro.nn.model import init_cache
 from repro.nn.transformer import layer_kind
@@ -112,6 +115,11 @@ class EngineModel:
     # (0 = bounded only by on-demand eviction).
     prefix_cache: bool = False
     prefix_cache_pages: int = 0
+    # Decode attention backend: "xla" gathers the full page-table width
+    # per step; "pallas" routes paged GQA decode through the
+    # kernels/paged_attention kernel, which walks only each row's live
+    # pages (interpret mode off-TPU — see ServingEngine kernel_interpret).
+    kernel_backend: str = "xla"      # "xla" | "pallas"
 
     def __post_init__(self):
         if self.kv_layout not in ("slot", "paged"):
@@ -121,6 +129,14 @@ class EngineModel:
             raise ValueError(
                 f"{self.name}: prefix_cache needs kv_layout='paged' "
                 "(slot arenas have no pages to retain)")
+        if self.kernel_backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown kernel_backend "
+                             f"{self.kernel_backend!r} "
+                             "(expected 'xla' or 'pallas')")
+        if self.kernel_backend == "pallas" and self.kv_layout != "paged":
+            raise ValueError(
+                f"{self.name}: kernel_backend='pallas' needs "
+                "kv_layout='paged' (the kernel reads a page pool)")
 
 
 class ServingEngine:
@@ -140,7 +156,10 @@ class ServingEngine:
                  energy_model: Optional[EnergyModel] = None,
                  wear_aware: float = 0.0,
                  fault_rate: float = 0.0,
-                 fault_seed: int = 0):
+                 fault_seed: int = 0,
+                 kernel_backend: Optional[str] = None,
+                 kernel_interpret: Optional[bool] = None,
+                 fuse_sampling: bool = True):
         if not models:
             raise ValueError("need at least one tenant model")
         names = [m.name for m in models]
@@ -166,6 +185,22 @@ class ServingEngine:
         self.models: Dict[str, EngineModel] = {m.name: m for m in models}
         self.arenas: Dict[str, Any] = {}
         self._decode: Dict[str, Callable] = {}
+        self._decode_fused: Dict[str, Optional[Callable]] = {}
+        self._backend: Dict[str, str] = {}
+        # kernel_backend (engine-level) overrides every paged tenant's
+        # EngineModel.kernel_backend; kernel_interpret=None resolves to
+        # interpret mode off-TPU (CI equivalence runs force True).
+        # fuse_sampling keeps sampling inside the jitted paged decode step
+        # so logits never leave device; False splits it back out (the
+        # batched sampler still makes it one device call per step).
+        if kernel_backend is not None and kernel_backend not in (
+                "xla", "pallas"):
+            raise ValueError(f"unknown kernel_backend {kernel_backend!r} "
+                             "(expected 'xla' or 'pallas')")
+        self._interpret = (jax.default_backend() != "tpu"
+                           if kernel_interpret is None
+                           else bool(kernel_interpret))
+        self._fuse = bool(fuse_sampling)
         for m in models:
             if m.kv_layout == "paged":
                 n_pages = m.n_pages or m.kv_slots * -(-m.max_seq
@@ -174,10 +209,20 @@ class ServingEngine:
                     m.cfg, m.kv_slots, n_pages, m.page_size,
                     prefix_cache=m.prefix_cache,
                     prefix_cache_pages=m.prefix_cache_pages)
-                self._decode[m.name] = cached_paged_serve_step(m.cfg)
+                backend = (kernel_backend if kernel_backend is not None
+                           else m.kernel_backend)
+                interp = self._interpret if backend == "pallas" else False
+                self._backend[m.name] = backend
+                self._decode[m.name] = cached_paged_serve_step(
+                    m.cfg, backend, interp)
+                self._decode_fused[m.name] = (
+                    cached_fused_paged_serve_step(m.cfg, backend, interp)
+                    if self._fuse else None)
             else:
                 self.arenas[m.name] = KVArena(m.cfg, m.kv_slots, m.max_seq)
+                self._backend[m.name] = "xla"
                 self._decode[m.name] = cached_serve_step(m.cfg)
+                self._decode_fused[m.name] = None
 
         self.residency = WeightResidencyManager(
             {m.name: (m.params, m.cfg) for m in models},
@@ -243,6 +288,10 @@ class ServingEngine:
                     arena.allocator.faults = self.faults
                     arena.allocator.fault_plane = f"kv:{name}"
         self.requests: Dict[int, Request] = {}
+        # per-request raw uint32 PRNG roots, host-cached so building the
+        # batched sampler inputs costs no device syncs on the decode path
+        # (greedy requests get a zero key — the sampled lane is discarded)
+        self._keys: Dict[int, np.ndarray] = {}
         self._clock = clock
         self._next_rid = 0
         self._step_no = 0
@@ -486,8 +535,39 @@ class ServingEngine:
             n_admitted += 1
         return n_admitted, n_tokens
 
+    def _sample_key(self, req: Request) -> np.ndarray:
+        """Host-cached raw uint32 PRNG root for `req` (zeros for greedy —
+        that lane's sampled value is discarded).  One device sync per
+        request lifetime instead of one per decode step."""
+        k = self._keys.get(req.rid)
+        if k is None:
+            k = (np.zeros(2, np.uint32) if req.temperature <= 0.0
+                 else np.asarray(request_key(req.seed, req.rid),
+                                 dtype=np.uint32))
+            self._keys[req.rid] = k
+        return k
+
+    def _sample_inputs(self, arena) -> tuple:
+        """Per-row sampler inputs over a tenant's whole decode batch.
+        Inactive rows get temperature 0 / zero keys; their lanes compute a
+        greedy argmax of scratch logits that nobody reads."""
+        n_rows = len(arena.owner)
+        temps = np.zeros(n_rows, np.float32)
+        tks = np.zeros(n_rows, np.int32)
+        keys = np.zeros((n_rows, 2), np.uint32)
+        steps = np.zeros(n_rows, np.int32)
+        for slot in arena.active_slots():
+            req = self.requests[arena.owner_of(slot)]
+            temps[slot] = req.temperature
+            tks[slot] = req.top_k
+            keys[slot] = self._sample_key(req)
+            steps[slot] = len(req.generated)
+        return (jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(keys),
+                jnp.asarray(steps))
+
     def _finish(self, req: Request) -> None:
         arena = self.arenas[req.model]
+        self._keys.pop(req.rid, None)
         if isinstance(arena, PagedKVArena):
             # with the prefix cache on, the finished request donates its
             # prompt+generated pages into the radix tree instead of
@@ -791,6 +871,7 @@ class ServingEngine:
                 n_chunks = hit_tokens = 0
 
         n_decoded = 0
+        sample_syncs = 0
         for name in decodable:
             m = self.models[name]
             arena = self.arenas[name]
@@ -817,8 +898,17 @@ class ServingEngine:
             slots = [s for s in arena.active_slots() if decoding(s)]
             if not slots:
                 continue
+            fused = self._decode_fused[name] is not None
+            temps, tks, keys, steps = self._sample_inputs(arena)
             with self.tracer.span("decode", tenant=name, n_slots=len(slots)):
-                if paged:
+                if paged and fused:
+                    # fused step: sampling runs on device, logits never
+                    # leave it — toks is the only thing the host pulls
+                    tokens, pos, tables = arena.decode_inputs()
+                    toks_dev, arena.caches = self._decode_fused[name](
+                        m.params, tokens, arena.caches, pos, tables,
+                        temps, tks, keys, steps)
+                elif paged:
                     tokens, pos, tables = arena.decode_inputs()
                     logits, arena.caches = self._decode[name](
                         m.params, tokens, arena.caches, pos, tables)
@@ -826,13 +916,18 @@ class ServingEngine:
                     tokens, pos = arena.decode_inputs()
                     logits, arena.caches = self._decode[name](
                         m.params, tokens, arena.caches, pos)
-            with self.tracer.span("sample", tenant=name):
-                nxt = np.asarray(jnp.argmax(logits[:, :m.cfg.vocab],
-                                            axis=-1))
+            with self.tracer.span("sample", tenant=name,
+                                  fused=fused, n_slots=len(slots)):
+                if not fused:
+                    # split path: one batched sampler call + one host sync
+                    # for the whole batch (never per row)
+                    toks_dev = cached_sample_tokens(m.cfg.vocab)(
+                        logits, temps, tks, keys, steps)
+                nxt = np.asarray(toks_dev)
+                sample_syncs += 1
                 for slot in slots:
                     req = self.requests[arena.owner_of(slot)]
-                    tok = (int(nxt[slot]) if req.temperature <= 0.0
-                           else self._pick_token(req, logits[slot]))
+                    tok = int(nxt[slot])
                     req.generated.append(tok)
                     req.note_token(self._clock())
                     arena.advance(slot, tok)
@@ -886,6 +981,7 @@ class ServingEngine:
             n_prefill_chunks=n_chunks,
             prefix_hit_tokens=hit_tokens,
             prefix_cached_pages=cached_pages,
+            sample_syncs=sample_syncs,
             component_s=self.tracer.step_components()))
         self._step_no += 1
         self._wall_s += self._clock() - now

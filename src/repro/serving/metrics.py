@@ -179,6 +179,10 @@ class StepRecord:
     # and the retained-page gauge across all paged tenants
     prefix_hit_tokens: int = 0
     prefix_cached_pages: int = 0
+    # host syncs spent pulling sampled tokens (or logits) off device this
+    # step: 1 per decoded tenant batch (fused or batched sampler), never
+    # per row
+    sample_syncs: int = 0
     # tracer component breakdown for this step: component name -> seconds
     # spent inside spans of that component (empty when tracing is off)
     component_s: Dict[str, float] = dataclasses.field(default_factory=dict)

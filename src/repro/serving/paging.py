@@ -442,11 +442,14 @@ def _cached_page_read(cfg: ModelConfig, page_size: int):
     """Jitted pool→staging gather, the inverse of `_cached_page_write`:
     copy physical page `page` of the pool into logical block `block` of a
     batch-1 staging cache.  The chunk-skip warm path uses it to seed the
-    staging carry-in from cached prefix pages, so the first computed chunk
-    attends exactly the K/V the donor computed (bf16 pools round-trip
-    bit-exact; int8 pools would dequantize, so the engine never skips
-    there).  Staging is donated — the caller immediately rebinds it."""
+    staging carry-in from cached prefix pages (bf16 pools round-trip
+    bit-exact).  int8 pools are dequantization-aware: the pool holds
+    {k, v, k_scale, v_scale} while staging attends raw bf16 {k, v}, so
+    the page's codes are dequantized on the way out — the warm prefix
+    carries the same quantization error decode attends after install.
+    Staging is donated — the caller immediately rebinds it."""
     plan = stack_plan(cfg)
+    int8 = cfg.kv_cache_dtype == "int8" and cfg.attn_type != "mla"
 
     def read(one, pool, block, page):
         out = []
@@ -459,7 +462,29 @@ def _cached_page_read(cfg: ModelConfig, page_size: int):
                 chunk = jax.lax.dynamic_slice_in_dim(a, page, 1, axis=0)
                 return jax.lax.dynamic_update_slice_in_dim(
                     o, chunk.astype(o.dtype), block * page_size, axis=1)
-            out.append(jax.tree.map(upd, seg_one, seg_pool))
+
+            if int8:
+                # pool entry {k, v, k_scale, v_scale} → staging {k, v}:
+                # dequantize the page's codes with its per-(token, head)
+                # scales (codes.f32 * scale == nn.attention._kv_dequant)
+                po, pa = seg_one["attn"], seg_pool["attn"]
+                ent = {}
+                axis = 1 if scanned else 0
+                for f in ("k", "v"):
+                    c = jax.lax.dynamic_slice_in_dim(pa[f], page, 1,
+                                                     axis=axis)
+                    s = jax.lax.dynamic_slice_in_dim(pa[f + "_scale"], page,
+                                                     1, axis=axis)
+                    deq = (c.astype(jnp.float32)
+                           * s[..., None]).astype(po[f].dtype)
+                    ent[f] = jax.lax.dynamic_update_slice_in_dim(
+                        po[f], deq, block * page_size,
+                        axis=2 if scanned else 1)
+                new_seg = dict(seg_one)
+                new_seg["attn"] = ent
+                out.append(new_seg)
+            else:
+                out.append(jax.tree.map(upd, seg_one, seg_pool))
         return out
 
     return jax.jit(read, donate_argnums=(0,))
@@ -514,10 +539,12 @@ class PagedKVArena:
         self.n_rows = n_rows
         self.page_size = page_size
         self.prefix_cache = bool(prefix_cache)
-        # chunk-skip needs the pool→staging reload to be bit-exact; int8
-        # pools store quantized K/V the staging attends raw, so those
-        # tenants retain/share pages but never skip prefill compute
-        self.skip_ok = self.prefix_cache and cfg.kv_cache_dtype != "int8"
+        # chunk-skip reloads pool pages into the staging carry-in; int8
+        # pools dequantize on the way out (_cached_page_read), so int8
+        # tenants skip covered chunks too — the reloaded prefix carries
+        # quantization error the cold path's raw bf16 staging did not,
+        # which is the same error decode already attends post-install
+        self.skip_ok = self.prefix_cache
         self.allocator = PageAllocator(
             n_pages, page_size, retain=self.prefix_cache,
             max_cached=(prefix_cache_pages or None) if prefix_cache

@@ -36,3 +36,39 @@ def sample_token(logits: jax.Array, vocab: int, *, temperature: float = 0.0,
         kth = jax.lax.top_k(scaled, top_k)[0][-1]
         scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
     return int(jax.random.categorical(jax.random.fold_in(key, step), scaled))
+
+
+def sample_tokens(logits: jax.Array, vocab: int, *, temperatures: jax.Array,
+                  top_ks: jax.Array, keys: jax.Array,
+                  steps: jax.Array) -> jax.Array:
+    """Batched `sample_token`: one device call for a whole decode batch.
+
+    logits (B, V≥vocab) — the padded vocab tail is masked off; temperatures
+    (B,) f32 (<= 0 → greedy argmax for that row); top_ks (B,) int32 (0 or
+    ≥ vocab → disabled); keys (B, 2) raw uint32 per-request PRNG roots;
+    steps (B,) int32 fold_in indices (= n tokens already generated).
+    Returns (B,) int32 token ids, row-for-row identical to per-row
+    `sample_token` calls — same kth-value top-k cut, same
+    `fold_in(key, step)` stream — so the determinism contract survives
+    batching.  Jit-safe; rows the caller doesn't care about can carry
+    temperature 0 / zero keys and be discarded."""
+    logits = logits[:, :vocab]
+    temperatures = jnp.asarray(temperatures, jnp.float32)
+    top_ks = jnp.asarray(top_ks, jnp.int32)
+    steps = jnp.asarray(steps, jnp.int32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temperatures > 0.0, temperatures, 1.0)
+    scaled = logits.astype(jnp.float32) / safe_t[:, None]
+    # per-row k-th largest value (== lax.top_k(row, k)[0][-1]): one
+    # descending sort, then pick column k-1
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    kth = jnp.take_along_axis(
+        sorted_desc, jnp.clip(top_ks - 1, 0, vocab - 1)[:, None], axis=-1)
+    use_topk = ((top_ks > 0) & (top_ks < vocab))[:, None]
+    scaled = jnp.where(use_topk & (scaled < kth), -jnp.inf, scaled)
+
+    def draw(key, step, row):
+        return jax.random.categorical(jax.random.fold_in(key, step), row)
+
+    sampled = jax.vmap(draw)(keys, steps, scaled).astype(jnp.int32)
+    return jnp.where(temperatures <= 0.0, greedy, sampled)

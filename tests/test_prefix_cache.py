@@ -562,10 +562,12 @@ def test_full_prompt_cached_still_emits_first_token():
     assert r2.generated == sequential_tokens(prompt, 3, cache_len=24 * PAGE)
 
 
-def test_int8_tenant_shares_pages_but_never_skips():
-    """int8 pools hold quantized K/V the bf16 staging cannot reload
-    bit-exact, so those tenants retain/share pages (install writes saved)
-    but always compute their chunks — and stay token-identical."""
+def test_int8_tenant_skips_covered_chunks_token_for_token():
+    """int8 tenants now *skip* covered prefix-cache chunks: the
+    dequantize-aware `_cached_page_read` reloads cached pages into the
+    bf16 staging (codes × scales, same values decode attends after
+    install), so a warm int8 request skips its covered chunks and still
+    produces the same tokens as the cold run."""
     import dataclasses as dc
     cfg8 = dc.replace(CFG, kv_cache_dtype="int8")
     params = PARAMS
@@ -588,10 +590,11 @@ def test_int8_tenant_shares_pages_but_never_skips():
     warm.run()
     w2 = warm.submit("a", prompt, max_new_tokens=5)
     s = warm.run()
-    assert not warm.arenas["a"].skip_ok
-    assert s["prefix_hit_tokens"] == 0
-    assert s["prefill_tokens"] == 24          # both computed in full
-    assert s["kv_shared_page_hits"] >= 3      # but pages were shared
+    assert warm.arenas["a"].skip_ok
+    # w2's prompt is fully covered: skip to the len-1 cap (11 tokens
+    # served from cache), only the final chunk computes
+    assert s["prefix_hit_tokens"] == 11
+    assert s["prefill_tokens"] < 24           # w2 did not re-prefill
     assert w1.generated == w2.generated == c1.generated
 
 

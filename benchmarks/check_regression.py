@@ -82,6 +82,18 @@ SPECS: Dict[str, Dict[str, Tuple[str, float]]] = {
         "sample_syncs_max_pallas": ("lower", 0.0),
         "steps": ("lower", 0.0),
     },
+    # part 10: the live telemetry plane must stay token-identical on an
+    # identical schedule (a flag and a deterministic step count, both at
+    # tolerance 0).  Host overhead is wall-clock: the on/off *ratio* is
+    # gated as a generous ceiling (10x the committed baseline, and the
+    # ratio is ~1 and never zero, unlike the us/step delta which can
+    # clamp to 0 on a noisy host) so a telemetry hook accidentally
+    # landing on the decode path still trips, while CI noise does not.
+    "telemetry": {
+        "tokens_identical": ("higher", 0.0),
+        "steps": ("lower", 0.0),
+        "host_overhead_ratio": ("lower", 9.0),
+    },
 }
 
 

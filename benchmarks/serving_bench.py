@@ -91,10 +91,12 @@ from benchmarks.common import csv_row
 from benchmarks.streaming_bench import _checkpointify
 from repro.configs import get_config
 from repro.nn.model import init_params
-from repro.serving import (EngineModel, InstallCostModel, SchedulerConfig,
-                           ServingEngine, Tracer, VirtualClock,
+from repro.serving import (EngineModel, FlightRecorder, InstallCostModel,
+                           SchedulerConfig, ServingEngine, SLOConfig,
+                           TelemetryConfig, Tracer, VirtualClock,
                            WeightResidencyManager, drive_simulated,
-                           format_summary)
+                           format_summary, prometheus_text,
+                           validate_events_jsonl, validate_prometheus_text)
 from repro.serving.tracing import TRACE_COMPONENTS
 from repro.serving.variants import perturbed_variant
 
@@ -873,6 +875,127 @@ def kernel_backend_bench() -> dict:
     return out
 
 
+# ----------------------- live telemetry plane overhead (part 10)
+def _run_telemetry_arm(cfg, params_a, params_b, jobs, *,
+                       telemetry: bool, out_dir: str):
+    """One telemetry arm over the part-7 workload shape.  The telemetry
+    arm turns EVERYTHING on — windowed percentiles, an (intentionally
+    breaching) SLO tracker, the JSONL event stream, the flight recorder,
+    and the step watchdog — the off arm is the stock engine.  Same
+    virtual-clock schedule both ways, so the decoded tokens must match
+    bit for bit; the wall `time.perf_counter` around the drive is the
+    honest host cost (the engine's own wall_s is virtual here)."""
+    clock = VirtualClock()
+    kv = dict(kv_slots=4, max_seq=64, kv_layout="paged",
+              page_size=PAGE_SIZE, n_pages=WEAR_N_PAGES, prefix_cache=True)
+    kwargs = {}
+    if telemetry:
+        # ITL target of half a step: guaranteed to burn, so the bench
+        # exercises breach -> trace instant -> flight dump every run
+        kwargs = dict(
+            telemetry=TelemetryConfig(
+                window=64,
+                slo=SLOConfig(itl_p95_s=WEAR_STEP_DT / 2),
+                events_path=os.path.join(out_dir, "events.jsonl")),
+            recorder=FlightRecorder(64, out_dir=out_dir),
+            stall_timeout_s=300.0)
+    eng = ServingEngine(
+        [EngineModel("base", params_a, cfg, **kv),
+         EngineModel("variant", params_b, cfg, **kv)],
+        weight_arena_slots=cfg.n_layers + 1,
+        sched=SchedulerConfig(max_prefill_per_step=4,
+                              model_turn_steps=TURN_STEPS),
+        clock=clock, **kwargs)
+    t0 = time.perf_counter()
+    summary = drive_simulated(eng, clock, jobs, dt=WEAR_STEP_DT)
+    host_s = time.perf_counter() - t0
+    summary["_generated"] = {r.rid: list(r.generated)
+                             for r in eng.requests.values()}
+    return eng, summary, host_s
+
+
+def telemetry_bench(telemetry_dir: str = "") -> dict:
+    print("\n== Live telemetry plane "
+          "(off vs windows+SLO+recorder+watchdog, identical schedule) ==")
+    import tempfile
+
+    cfg = get_config("gemma-7b", smoke=True)
+    params_a = _checkpointify(init_params(jax.random.PRNGKey(0), cfg))
+    params_b = perturbed_variant(params_a)
+    jobs = _wear_workload(cfg)
+    out_dir = telemetry_dir or tempfile.mkdtemp(prefix="telemetry-bench-")
+    os.makedirs(out_dir, exist_ok=True)
+
+    # warmup arm: pay the jit compiles outside the timed comparison
+    _run_telemetry_arm(cfg, params_a, params_b, jobs, telemetry=False,
+                       out_dir=out_dir)
+    eng_off, off, host_off = _run_telemetry_arm(
+        cfg, params_a, params_b, jobs, telemetry=False, out_dir=out_dir)
+    eng_on, on, host_on = _run_telemetry_arm(
+        cfg, params_a, params_b, jobs, telemetry=True, out_dir=out_dir)
+
+    assert on["_generated"] == off["_generated"], \
+        "telemetry changed decoded tokens"
+    assert on["steps"] == off["steps"], "telemetry changed the schedule"
+    steps = int(on["steps"])
+    overhead_us = max(host_on - host_off, 0.0) / max(steps, 1) * 1e6
+    # the ratio is what the regression gate watches: on this class of
+    # host the absolute delta is noise-dominated (and can clamp to 0,
+    # which would make a relative-tolerance gate a zero ceiling), while
+    # on/off is always positive and ~1 unless a hook lands on the
+    # decode path
+    overhead_ratio = host_on / max(host_off, 1e-9)
+
+    # the artifacts the on arm produced, validated in-process
+    prom = prometheus_text(eng_on.metrics.registry, eng_on.telemetry)
+    prom_errors = validate_prometheus_text(prom)
+    assert not prom_errors, f"invalid Prometheus exposition: {prom_errors}"
+    events_path = os.path.join(out_dir, "events.jsonl")
+    eng_on.telemetry.close()
+    with open(events_path, encoding="utf-8") as f:
+        events_text = f.read()
+    events_errors = validate_events_jsonl(events_text)
+    assert not events_errors, f"invalid events JSONL: {events_errors}"
+    events_lines = len(events_text.splitlines())
+    health = eng_on.health()
+    assert health["ok"] is False, \
+        "the intentionally-tight ITL SLO must be breached"
+    assert eng_on.recorder.dumps, "SLO breach must leave a flight dump"
+
+    for tag, s, host_s in (("telemetry-off", off, host_off),
+                           ("telemetry-on", on, host_on)):
+        csv_row(f"serving/{tag}", host_s / max(steps, 1) * 1e6,
+                f"steps={steps}")
+        print(f"-- {tag}: host {host_s*1e3:.1f} ms over {steps} steps "
+              f"({host_s/max(steps,1)*1e6:.0f} us/step)")
+    print(format_summary(on))
+    print(f"-- token-for-token identical over {steps} steps; telemetry "
+          f"host overhead {overhead_us:.0f} us/step; "
+          f"{events_lines} JSONL events, "
+          f"{len(eng_on.recorder.dumps)} flight dump(s) "
+          f"({', '.join(os.path.basename(p) for p in eng_on.recorder.dumps)}), "
+          f"prom exposition {len(prom.splitlines())} lines (valid)")
+    if telemetry_dir:
+        with open(os.path.join(out_dir, "prom.txt"), "w") as f:
+            f.write(prom)
+        with open(os.path.join(out_dir, "health.json"), "w") as f:
+            json.dump(_json_safe(health), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"-- wrote prom.txt / health.json / events.jsonl / flight "
+              f"dumps to {out_dir}")
+    for s in (off, on):
+        s.pop("_generated")
+    return {
+        "telemetry-off": off, "telemetry-on": on,
+        "host_s_off": host_off, "host_s_on": host_on,
+        "overhead_us_per_step": overhead_us,
+        "host_overhead_ratio": overhead_ratio,
+        "tokens_identical": 1.0,
+        "events_lines": float(events_lines),
+        "flight_dumps": float(len(eng_on.recorder.dumps)),
+    }
+
+
 # ------------------------------------------------- headline persistence
 _DEFAULT_OUT = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -978,6 +1101,22 @@ def _headlines(results: dict) -> dict:
                 kb[tag].get("component_decode_s", 0.0)
             h["kernel"][f"sample_s_{tag}"] = \
                 kb[tag].get("component_sample_s", 0.0)
+    tel = results.get("telemetry")
+    if tel:
+        h["telemetry"] = {
+            # the identity bit and schedule length are deterministic and
+            # gated at tolerance 0; the host overhead ratio is wall-clock
+            # and gated only as a generous ceiling (us/step is reported
+            # but ungated: the delta is noise on shared CI hosts)
+            "tokens_identical": tel["tokens_identical"],
+            "steps": tel["telemetry-on"]["steps"],
+            "overhead_us_per_step": tel["overhead_us_per_step"],
+            "host_overhead_ratio": tel["host_overhead_ratio"],
+            "events_lines": tel["events_lines"],
+            "flight_dumps": tel["flight_dumps"],
+            "ttft_p95_s": tel["telemetry-on"]["ttft_p95_s"],
+            "itl_max_p95_s": tel["telemetry-on"]["itl_max_p95_s"],
+        }
     comp = results.get("components")
     if comp:
         h["components"] = {
@@ -1039,12 +1178,13 @@ def tenant_reuse_bench() -> dict:
 
 def main(argv=None) -> dict:
     p = argparse.ArgumentParser(description="serving-engine benchmarks")
-    p.add_argument("--parts", default="1,2,3,4,5,6,7,8,9",
+    p.add_argument("--parts", default="1,2,3,4,5,6,7,8,9,10",
                    help="comma-separated parts to run: 1 tenant reuse, "
                         "2 paged-vs-slot, 3 install overlap, 4 chunked "
                         "prefill, 5 prefix cache, 6 component breakdown, "
                         "7 wear & write energy, 8 wear-aware placement "
-                        "& fault sweep, 9 kernel backend & fused sampling")
+                        "& fault sweep, 9 kernel backend & fused "
+                        "sampling, 10 live telemetry plane overhead")
     p.add_argument("--out", default=_DEFAULT_OUT,
                    help="path for the BENCH_serving.json headline dump "
                         "('' disables)")
@@ -1055,6 +1195,10 @@ def main(argv=None) -> dict:
                    help="part 7: also write the reuse-on arm's per-plane "
                         "wear map (writes/flips/pulses per slot and page) "
                         "to this path")
+    p.add_argument("--telemetry-dir", default="",
+                   help="part 10: keep the telemetry-on arm's artifacts "
+                        "(events.jsonl, prom.txt, health.json, flight "
+                        "dumps) in this directory instead of a tempdir")
     args = p.parse_args(argv)
     parts = sorted({int(x) for x in args.parts.split(",") if x.strip()})
 
@@ -1077,6 +1221,8 @@ def main(argv=None) -> dict:
         results["faults"] = fault_wear_bench()
     if 9 in parts:
         results["kernel"] = kernel_backend_bench()
+    if 10 in parts:
+        results["telemetry"] = telemetry_bench(args.telemetry_dir)
     if args.out:
         _write_bench_json(args.out, _headlines(results))
     return results

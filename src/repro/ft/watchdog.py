@@ -7,6 +7,11 @@ Usage:
     for step in ...:
         with wd.armed(step):
             run_step()
+
+The serving engine arms the same watchdog as a per-step heartbeat
+(`ServingEngine(stall_timeout_s=...)`): a step that overruns the deadline
+fires `stall_suspected` telemetry + a flight-recorder dump while the step
+keeps running — on the serving side the watchdog observes, never kills.
 """
 from __future__ import annotations
 
@@ -21,10 +26,14 @@ class Watchdog:
         self.timeout_s = timeout_s
         self.on_timeout = on_timeout
         self.fired = False
+        self.fires = 0                       # lifetime deadline misses
+        self.fired_step: Optional[int] = None   # most recent missed step
         self._timer: Optional[threading.Timer] = None
 
     def _fire(self, step: int) -> None:
         self.fired = True
+        self.fires += 1
+        self.fired_step = step
         if self.on_timeout is not None:
             self.on_timeout(step)
 

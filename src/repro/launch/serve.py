@@ -40,8 +40,11 @@ def _json_safe(obj):
 
 def _run_engine(args) -> None:
     """Continuous batching across ≥ 2 tenants on one device budget."""
-    from repro.serving import (EngineModel, InstallCostModel, SchedulerConfig,
-                               ServingEngine, Tracer, format_summary)
+    from repro.serving import (EngineModel, FlightRecorder, InstallCostModel,
+                               PromEndpoint, SchedulerConfig, ServingEngine,
+                               SLOConfig, TelemetryConfig, Tracer,
+                               VirtualClock, drive_simulated, format_summary,
+                               prometheus_text)
     from repro.serving.variants import perturbed_variant
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -71,10 +74,34 @@ def _run_engine(args) -> None:
                     else cfg.n_layers + 1)
     # Structured tracing costs nothing unless asked for: a wall-clock
     # Tracer feeds both the Chrome-trace export and the per-step
-    # component_s breakdown in the summary.
-    tracer = Tracer() if args.trace_out else None
+    # component_s breakdown in the summary.  --virtual-clock swaps the
+    # wall clock for a VirtualClock and drives arrivals in simulated
+    # time, so every artifact (trace, health, flight dumps, events) is
+    # byte-deterministic — the CI telemetry-validation mode.
+    clock = VirtualClock() if args.virtual_clock else time.perf_counter
+    tracer = Tracer(clock=clock) if args.trace_out else None
+
+    # Live telemetry plane: declared SLO targets + windowed percentiles
+    # (constructing a TelemetryConfig turns the plane on — any exporter
+    # or SLO flag implies it), plus the bounded flight recorder dumped
+    # on retirement / SLO breach / stall / SIGUSR1 / crash.
+    slo = None
+    if args.slo_ttft_p95 or args.slo_itl_p95 or args.slo_queue_wait_p95:
+        slo = SLOConfig(ttft_p95_s=args.slo_ttft_p95,
+                        itl_p95_s=args.slo_itl_p95,
+                        queue_wait_p95_s=args.slo_queue_wait_p95)
+    telemetry = None
+    if (slo is not None or args.events_out or args.prom_out
+            or args.prom_port):
+        telemetry = TelemetryConfig(window=args.telemetry_window, slo=slo,
+                                    events_path=args.events_out)
+    recorder = (FlightRecorder(args.flight_recorder_steps,
+                               out_dir=args.flight_dir)
+                if args.flight_recorder_steps else None)
     eng = ServingEngine(
         tenants, weight_arena_slots=weight_slots, tracer=tracer,
+        clock=clock, telemetry=telemetry, recorder=recorder,
+        stall_timeout_s=args.stall_timeout_s,
         sched=SchedulerConfig(max_prefill_per_step=4,
                               model_turn_steps=args.turn_steps,
                               policy=args.queue_policy,
@@ -91,6 +118,18 @@ def _run_engine(args) -> None:
         wear_aware=args.wear_aware,
         fault_rate=args.fault_rate,
         fault_seed=args.fault_seed)
+    if recorder is not None:
+        # live-incident hooks: kill -USR1 <pid> snapshots the ring of a
+        # running replica; an unhandled crash dumps it on the way down
+        recorder.install_signal_handler()
+        recorder.install_excepthook()
+    endpoint = None
+    if args.prom_port:
+        endpoint = PromEndpoint(
+            args.prom_port,
+            lambda: prometheus_text(eng.metrics.registry, eng.telemetry))
+        print("prometheus endpoint on "
+              f"http://127.0.0.1:{endpoint.port}/metrics")
 
     # Artifact flush runs exactly once, whether the run completes, the
     # user hits Ctrl-C (KeyboardInterrupt unwinds to interpreter exit →
@@ -121,23 +160,52 @@ def _run_engine(args) -> None:
                 f.write("\n")
             print(f"wrote wear map ({len(eng.wear.planes)} planes) to "
                   f"{args.wear_json}")
+        if args.prom_out:
+            with open(args.prom_out, "w") as f:
+                f.write(prometheus_text(eng.metrics.registry, eng.telemetry))
+            print(f"wrote Prometheus text exposition to {args.prom_out}")
+        if eng.telemetry is not None:
+            eng.telemetry.close()
+        if recorder is not None and recorder.dumps:
+            print(f"flight recorder wrote {len(recorder.dumps)} dump(s): "
+                  + ", ".join(recorder.dumps))
 
-    if args.trace_out or args.metrics_json or args.wear_json:
+    if (args.trace_out or args.metrics_json or args.wear_json
+            or args.prom_out or args.events_out):
         atexit.register(flush)
         signal.signal(signal.SIGTERM, lambda signum, frame: sys.exit(1))
 
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        model = tenants[i % len(tenants)].name
-        plen = int(rng.integers(max(args.prompt_len // 2, 2),
-                                args.prompt_len + 1))
-        prompt = rng.integers(1, cfg.vocab, plen).tolist()
-        eng.submit(model, prompt, max_new_tokens=args.gen)
-    summary = eng.run()
+    if args.virtual_clock:
+        # deterministic Poisson-ish arrivals in simulated time (mean gap
+        # 4 ms, step dt 2 ms): the whole run — tokens, health, dumps,
+        # events — is byte-reproducible, no device clock involved
+        t, vjobs = 0.0, []
+        for i in range(args.requests):
+            model = tenants[i % len(tenants)].name
+            plen = int(rng.integers(max(args.prompt_len // 2, 2),
+                                    args.prompt_len + 1))
+            prompt = rng.integers(1, cfg.vocab, plen).tolist()
+            vjobs.append((t, model, prompt, args.gen))
+            t += float(rng.exponential(0.004))
+        summary = drive_simulated(eng, clock, vjobs, dt=0.002)
+    else:
+        for i in range(args.requests):
+            model = tenants[i % len(tenants)].name
+            plen = int(rng.integers(max(args.prompt_len // 2, 2),
+                                    args.prompt_len + 1))
+            prompt = rng.integers(1, cfg.vocab, plen).tolist()
+            eng.submit(model, prompt, max_new_tokens=args.gen)
+        summary = eng.run()
     print(f"engine: {args.requests} requests across {len(tenants)} models, "
           f"{args.kv_slots} KV slots each, weight arena {weight_slots} slots")
     print(format_summary(summary))
+    if eng.telemetry is not None:
+        print("health:", json.dumps(_json_safe(eng.health()),
+                                    sort_keys=True))
     flush()
+    if endpoint is not None:
+        endpoint.close()
 
 
 def main() -> None:
@@ -244,6 +312,52 @@ def main() -> None:
                         "cell-flip / pulse counts per weight slot and KV "
                         "page, Gini, hottest-N, histogram) as JSON to this "
                         "path; artifacts also flush on Ctrl-C/SIGTERM")
+    p.add_argument("--slo-ttft-p95", type=float, default=0.0,
+                   metavar="SECONDS",
+                   help="engine: TTFT p95 SLO target in seconds — "
+                        "evaluated as short+long burn-rate windows, "
+                        "breach/recover transitions emit trace instants "
+                        "and flight-recorder dumps (0 = untracked)")
+    p.add_argument("--slo-itl-p95", type=float, default=0.0,
+                   metavar="SECONDS",
+                   help="engine: worst inter-token-gap p95 SLO target in "
+                        "seconds (0 = untracked)")
+    p.add_argument("--slo-queue-wait-p95", type=float, default=0.0,
+                   metavar="SECONDS",
+                   help="engine: queue-wait p95 SLO target in seconds "
+                        "(0 = untracked)")
+    p.add_argument("--telemetry-window", type=int, default=128,
+                   help="engine: sliding-window size for live windowed "
+                        "percentiles (exact over the last N samples; "
+                        "lifetime P² estimators ride along at O(1))")
+    p.add_argument("--prom-out", type=str, default="",
+                   help="engine: write Prometheus text exposition "
+                        "(registry + live windows + SLO status) to this "
+                        "path at exit — the textfile-collector mode")
+    p.add_argument("--prom-port", type=int, default=0,
+                   help="engine: serve /metrics on this localhost port "
+                        "via a stdlib http.server daemon thread "
+                        "(0 = no endpoint)")
+    p.add_argument("--events-out", type=str, default="",
+                   help="engine: append-mode JSONL event stream (per-step "
+                        "window snapshots, request finishes, SLO "
+                        "transitions) to this path")
+    p.add_argument("--flight-recorder-steps", type=int, default=0,
+                   help="engine: keep a flight-recorder ring of the last "
+                        "N steps (StepRecords + trace events + health), "
+                        "dumped to JSON on unit retirement, SLO breach, "
+                        "suspected stall, SIGUSR1, or crash (0 = off)")
+    p.add_argument("--flight-dir", type=str, default=".",
+                   help="engine: directory flight-recorder dumps are "
+                        "written into")
+    p.add_argument("--stall-timeout-s", type=float, default=0.0,
+                   help="engine: arm the step watchdog with this deadline "
+                        "— a step that overruns it emits stall_suspected "
+                        "+ a flight dump; observation only (0 = off)")
+    p.add_argument("--virtual-clock", action="store_true",
+                   help="engine: run on a VirtualClock with deterministic "
+                        "simulated arrivals — every artifact is "
+                        "byte-reproducible (the CI telemetry mode)")
     args = p.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -15,9 +15,16 @@ from repro.serving.metrics import (Counter, EngineMetrics, Gauge, Histogram,
 from repro.serving.paging import PageAllocator, PagedKVArena
 from repro.serving.prefix_cache import RadixNode, RadixPrefixCache
 from repro.serving.request import Request, RequestStatus
+from repro.serving.recorder import FlightRecorder
 from repro.serving.residency import InstallPipeline, WeightResidencyManager
 from repro.serving.sampling import request_key, sample_token, sample_tokens
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
+from repro.serving.telemetry import (EngineTelemetry, P2Quantile,
+                                     PromEndpoint, SLOConfig, SLOTracker,
+                                     SlidingWindow, StreamStat,
+                                     TelemetryConfig, prometheus_text,
+                                     validate_events_jsonl,
+                                     validate_prometheus_text)
 from repro.serving.tracing import NULL_TRACER, NullTracer, Tracer
 from repro.serving.wear import WearMap, WearPlane, gini_coefficient
 from repro.streaming.plan import InstallCostModel
@@ -33,4 +40,8 @@ __all__ = [
     "drive_simulated", "request_key", "sample_token", "sample_tokens",
     "PrefillProgress", "bucket_for", "bucket_ladder",
     "WearMap", "WearPlane", "gini_coefficient", "FaultModel",
+    "TelemetryConfig", "EngineTelemetry", "SLOConfig", "SLOTracker",
+    "P2Quantile", "SlidingWindow", "StreamStat", "FlightRecorder",
+    "PromEndpoint", "prometheus_text",
+    "validate_prometheus_text", "validate_events_jsonl",
 ]

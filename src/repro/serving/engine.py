@@ -76,15 +76,18 @@ from repro.nn.model import init_cache
 from repro.nn.transformer import layer_kind
 from repro.serving.bucketing import (PrefillProgress, bucket_for,
                                      bucket_ladder)
+from repro.ft import Watchdog
 from repro.serving.faults import FaultModel
 from repro.serving.kv_arena import KVArena
 from repro.serving.metrics import EngineMetrics, StepRecord
+from repro.serving.recorder import FlightRecorder
+from repro.serving.telemetry import EngineTelemetry, TelemetryConfig
 from repro.serving.paging import PagedKVArena
 from repro.serving.request import Request, RequestStatus
 from repro.serving.residency import InstallPipeline, WeightResidencyManager
 from repro.serving.sampling import request_key, sample_token
 from repro.serving.scheduler import SchedulerConfig, StepScheduler
-from repro.serving.tracing import NULL_TRACER, NullTracer, Tracer
+from repro.serving.tracing import NULL_TRACER, Tracer
 from repro.serving.wear import WearMap
 from repro.sim.energy import EnergyModel
 from repro.streaming.plan import InstallCostModel
@@ -159,7 +162,10 @@ class ServingEngine:
                  fault_seed: int = 0,
                  kernel_backend: Optional[str] = None,
                  kernel_interpret: Optional[bool] = None,
-                 fuse_sampling: bool = True):
+                 fuse_sampling: bool = True,
+                 telemetry: Optional[TelemetryConfig] = None,
+                 recorder: Optional[FlightRecorder] = None,
+                 stall_timeout_s: float = 0.0):
         if not models:
             raise ValueError("need at least one tenant model")
         names = [m.name for m in models]
@@ -245,6 +251,26 @@ class ServingEngine:
         self.scheduler = StepScheduler(sched)
         self.scheduler.tracer = self.tracer
         self.metrics = EngineMetrics()
+
+        # Live telemetry plane (all observation-only — no scheduling
+        # decision ever reads a telemetry value, so enabling any of it is
+        # token-identical to defaults-off; tests + bench part 10 assert
+        # this).  telemetry: streaming windowed percentiles + SLO burn
+        # tracking, fed per step / per finished request.  recorder: a
+        # bounded flight ring dumped on retirement / SLO breach / stall /
+        # SIGUSR1 / crash.  stall_timeout_s > 0 arms the ft.Watchdog
+        # around every step as a serving heartbeat.
+        self.telemetry: Optional[EngineTelemetry] = (
+            EngineTelemetry(telemetry, tracer=self.tracer)
+            if telemetry is not None else None)
+        self.recorder = recorder
+        if recorder is not None:
+            recorder.tracer = self.tracer
+        self._retired_seen = 0          # retirement-delta dump trigger
+        self._stall_timeout_s = float(stall_timeout_s)
+        self.watchdog: Optional[Watchdog] = (
+            Watchdog(self._stall_timeout_s, on_timeout=self._on_stall)
+            if self._stall_timeout_s > 0 else None)
 
         # Wear telemetry: one WearPlane per physical write plane — the
         # weight arena's slots and each paged tenant's KV page pool —
@@ -582,6 +608,8 @@ class ServingEngine:
         self.tracer.request_phase(req.rid, "finished",
                                   n_generated=len(req.generated))
         self.metrics.record_finish(req)
+        if self.telemetry is not None:
+            self.telemetry.on_finish(req)
 
     # ------------------------------------------------- chunked prefill
     def _admit_staged(self, allowed) -> int:
@@ -844,7 +872,19 @@ class ServingEngine:
         """One engine step: pick the scheduled tenants (by demand — active
         slots or queued requests), make their weights resident (instantly,
         or via the budgeted install pipeline), admit+prefill their queued
-        requests, then decode one token for every active slot."""
+        requests, then decode one token for every active slot.
+
+        With `stall_timeout_s > 0` the step runs under the ft.Watchdog:
+        a step that overruns the deadline fires `_on_stall` (trace
+        instant + flight-recorder dump) while the step keeps running —
+        the heartbeat observes, it never kills work."""
+        if self.watchdog is None:
+            self._step_inner()
+            return
+        with self.watchdog.armed(self._step_no):
+            self._step_inner()
+
+    def _step_inner(self) -> None:
         now = self._clock()
         with self.tracer.span("schedule"):
             demand = [name for name in self.models
@@ -965,7 +1005,7 @@ class ServingEngine:
             self.tracer.counter("install_queue_depth",
                                 self.pipeline.queue_depth
                                 if self.pipeline is not None else 0)
-        self.metrics.record_step(StepRecord(
+        rec = StepRecord(
             t=now,
             n_active=sum(len(a.active_slots()) for a in self.arenas.values()),
             queue_depth=self.scheduler.queue_depth,
@@ -982,9 +1022,96 @@ class ServingEngine:
             prefix_hit_tokens=hit_tokens,
             prefix_cached_pages=cached_pages,
             sample_syncs=sample_syncs,
-            component_s=self.tracer.step_components()))
+            component_s=self.tracer.step_components())
+        self.metrics.record_step(rec)
+        if self.telemetry is not None or self.recorder is not None:
+            self._observe_step(rec, kv_total - kv_used)
         self._step_no += 1
         self._wall_s += self._clock() - now
+
+    def _observe_step(self, rec: StepRecord, free_pages: int) -> None:
+        """Feed the live-telemetry plane after a step: window updates,
+        SLO transitions, the flight ring, and the two recorder triggers
+        the engine itself detects (unit retirement, SLO breach)."""
+        transitions = (self.telemetry.on_step(self._step_no, rec,
+                                              free_pages)
+                       if self.telemetry is not None else [])
+        if self.recorder is None:
+            return
+        self.recorder.record_step(self._step_no, rec, self.health())
+        retired = self.residency.stats.slots_retired + sum(
+            a.allocator.pages_retired for a in self.arenas.values()
+            if isinstance(a, PagedKVArena))
+        if retired > self._retired_seen:
+            # a slot/page retirement happened this step: capture the
+            # steps that led up to it (Hamun-style incident forensics)
+            self._retired_seen = retired
+            self.recorder.trigger("unit_retired", step=self._step_no,
+                                  retired_total=retired)
+        for kind, target, burn_s, burn_l in transitions:
+            if kind == "slo_breach":
+                self.recorder.trigger("slo_breach", step=self._step_no,
+                                      target=target, burn_short=burn_s,
+                                      burn_long=burn_l)
+
+    def _on_stall(self, step: int) -> None:
+        """Watchdog deadline missed: the step loop has been inside step
+        `step` for more than `stall_timeout_s`.  Observation only — the
+        step keeps running; we flag the suspicion and snapshot the ring
+        so a genuinely hung replica leaves forensics behind."""
+        if self.tracer.enabled:
+            self.tracer.instant("stall_suspected", step=step,
+                                timeout_s=self._stall_timeout_s)
+        if self.recorder is not None:
+            self.recorder.trigger("stall_suspected", step=step,
+                                  timeout_s=self._stall_timeout_s)
+
+    def health(self) -> Dict[str, Any]:
+        """Cheap live-health snapshot — the router-tier placement probe.
+
+        Pure observation over already-tracked state (no device sync, no
+        list walks over history), deterministic under `VirtualClock`:
+        two identical runs produce byte-identical `health()` JSON.  The
+        `slo`/`windows` sections appear only when telemetry is on; the
+        resource half is always available."""
+        kv_free = kv_total = pages_retired = cached_pages = 0
+        for arena in self.arenas.values():
+            if isinstance(arena, PagedKVArena):
+                kv_free += arena.allocator.n_free
+                kv_total += arena.allocator.n_pages
+                pages_retired += arena.allocator.pages_retired
+                cached_pages += arena.allocator.tree.n_cached
+        res = self.residency
+        slots_free = sum(1 for i, s in enumerate(res.slots)
+                         if s is None and i not in res.retired)
+        now = self._clock()
+        hit = self.metrics.prefix_hit_tokens
+        covered = hit + self.metrics.prefill_tokens
+        doc: Dict[str, Any] = {
+            "t": now,
+            "step": self._step_no,
+            "queue_depth": self.scheduler.queue_depth,
+            "queue_wait_s": self.scheduler.queue_wait(now),
+            "n_active": sum(len(a.active_slots())
+                            for a in self.arenas.values()),
+            "kv_free_pages": kv_free,
+            "kv_total_pages": kv_total,
+            "weight_slots_free": slots_free,
+            "weight_slots_total": res.arena_slots,
+            "slots_retired": res.stats.slots_retired,
+            "pages_retired": pages_retired,
+            "prefix_cached_pages": cached_pages,
+            "prefix_hit_rate": hit / max(covered, 1),
+            "install_backlog": (self.pipeline.queue_depth
+                                if self.pipeline is not None else 0),
+            "ok": True,
+        }
+        if self.telemetry is not None and self.telemetry.slo is not None:
+            doc["ok"] = not self.telemetry.slo.any_breached
+            doc["slo"] = self.telemetry.slo.status()
+        if self.telemetry is not None:
+            doc["windows"] = self.telemetry.snapshot_scope("_global")
+        return doc
 
     # -------------------------------------------------------------- run
     def has_work(self) -> bool:

@@ -17,7 +17,9 @@ def drive_simulated(eng, clock, jobs: Iterable[Job], *, dt: float = 1.0,
                     max_steps: int = 100_000,
                     before_step: Optional[Callable] = None,
                     after_step: Optional[Callable] = None,
-                    step_dt: Optional[Callable] = None
+                    step_dt: Optional[Callable] = None,
+                    health_every: int = 0,
+                    on_health: Optional[Callable] = None
                     ) -> Dict[str, float]:
     """Drive `eng` over `jobs` in virtual time and return its summary.
 
@@ -31,10 +33,14 @@ def drive_simulated(eng, clock, jobs: Iterable[Job], *, dt: float = 1.0,
     long step while a budgeted chunked prefill shows up as several short
     ones.  Idle iterations (no step) always advance by `dt`.  `before_step`
     / `after_step` hooks receive the engine around each step — the tests
-    use them to assert invariants mid-flight.  Raises RuntimeError instead
-    of spinning forever if the workload does not drain within `max_steps`.
+    use them to assert invariants mid-flight.  `health_every` > 0 calls
+    `on_health(eng.health())` every that-many driven steps — how the
+    tests and bench sample the live router-probe snapshot at
+    deterministic virtual times.  Raises RuntimeError instead of
+    spinning forever if the workload does not drain within `max_steps`.
     """
     pending = sorted(jobs)
+    n_steps = 0
     for _ in range(max_steps):
         if not pending and not eng.has_work():
             break
@@ -47,6 +53,10 @@ def drive_simulated(eng, clock, jobs: Iterable[Job], *, dt: float = 1.0,
                 before_step(eng)
             eng.step()
             stepped = True
+            n_steps += 1
+            if (health_every > 0 and on_health is not None
+                    and n_steps % health_every == 0):
+                on_health(eng.health())
             if after_step is not None:
                 after_step(eng)
         if stepped and step_dt is not None:

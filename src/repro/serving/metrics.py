@@ -353,6 +353,24 @@ class EngineMetrics:
             # engine._wear_stats(): install/KV write energy priced through
             # the EnergyModel plus the WearMap spread coefficients
             out.update(wear)
+        # Per-tenant attribution: every finished request knows its tenant
+        # (`Request.model`), so the summary splits the latency picture by
+        # tenant under dotted `tenant.<name>.<metric>` keys (no other
+        # summary key contains a dot — format_summary keys off that).
+        by_tenant: Dict[str, List[Request]] = {}
+        for req in self.finished:
+            by_tenant.setdefault(req.model, []).append(req)
+        for name in sorted(by_tenant):
+            reqs = by_tenant[name]
+            toks = float(sum(len(r.generated) for r in reqs))
+            pre = f"tenant.{name}."
+            out[pre + "requests"] = float(len(reqs))
+            out[pre + "tokens_generated"] = toks
+            out[pre + "tokens_per_s"] = toks / max(wall_s, 1e-9)
+            out[pre + "ttft_p95_s"] = _pct(
+                [r.ttft for r in reqs if r.ttft is not None], 95)
+            out[pre + "itl_max_p95_s"] = _pct(
+                [r.max_itl for r in reqs if r.max_itl is not None], 95)
         return out
 
 
@@ -428,4 +446,13 @@ def format_summary(s: Dict[str, float]) -> str:
             f"faults: {int(s['faults_survived'])} survived "
             f"({int(s.get('slots_retired', 0))} slots, "
             f"{int(s.get('pages_retired', 0))} pages retired)")
+    tenants = sorted({k.split(".", 2)[1] for k in s
+                      if k.startswith("tenant.")})
+    for name in tenants:
+        pre = f"tenant.{name}."
+        lines.append(
+            f"tenant {name}: {int(s[pre + 'requests'])} requests, "
+            f"ttft p95 {s[pre + 'ttft_p95_s']*1e3:.1f} ms, "
+            f"itl p95 {s[pre + 'itl_max_p95_s']*1e3:.1f} ms, "
+            f"{s[pre + 'tokens_per_s']:.1f} tok/s")
     return "\n".join(lines)

@@ -68,6 +68,14 @@ class StepScheduler:
         b = self.cfg.prefill_token_budget
         return float("inf") if b is None else float(b)
 
+    def queue_wait(self, now: float) -> float:
+        """Longest wait among currently-queued requests (0 when empty):
+        the head-of-line age `ServingEngine.health()` publishes for the
+        router tier — a cheap single pass, no history walk."""
+        if not self.queue:
+            return 0.0
+        return max(now - r.arrival_t for r in self.queue)
+
     # --------------------------------------------------------- admission
     def submit(self, req: Request) -> bool:
         if len(self.queue) >= self.cfg.max_queue:

@@ -109,6 +109,9 @@ class NullTracer:
     def step_components(self) -> Dict[str, float]:
         return {}
 
+    def events_since(self, index: int):
+        return 0, []
+
     def request_timeline(self, rid: str) -> str:
         return ""
 
@@ -197,6 +200,12 @@ class Tracer:
         acc = self._step_acc
         self._step_acc = {}
         return acc
+
+    def events_since(self, index: int):
+        """The event tail appended since `index`, plus the new cursor —
+        how the flight recorder slices each step's events into its ring
+        without copying the whole log every step."""
+        return len(self.events), self.events[index:]
 
     # ------------------------------------------------------------------
     # instants and counters
